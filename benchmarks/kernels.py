@@ -1,0 +1,289 @@
+"""The paper's five benchmarks (Table 2) as JAX data-parallel kernels.
+
+Same diversity axes as the paper: regular (Gaussian, Binomial, NBody) vs
+irregular (Mandelbrot, Ray), different in:out buffer counts, out patterns,
+arg counts and local-work-size-style blocking.  Each entry provides:
+
+    make(size)   -> (Program-ready dict: ins, outs, args, kernel, lws, cost_fn)
+    reference(.) -> numpy oracle for correctness checks
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- Gaussian
+
+
+def gaussian_kernel(offset, images, weights):
+    """Blur a batch of images (work-item = image). images: (n, H, W)."""
+    del offset
+    k = weights.shape[0]
+    pad = k // 2
+    x = jnp.pad(images, ((0, 0), (pad, pad), (pad, pad)), mode="edge")
+    out = jnp.zeros_like(images)
+    for i in range(k):
+        for j in range(k):
+            out = out + weights[i, j] * x[:, i : i + images.shape[1], j : j + images.shape[2]]
+    return out
+
+
+def make_gaussian(n_images: int = 512, hw: int = 64):
+    rng = np.random.default_rng(0)
+    images = rng.normal(size=(n_images, hw, hw)).astype(np.float32)
+    g = np.exp(-0.5 * (np.arange(5) - 2) ** 2)
+    w = np.outer(g, g).astype(np.float32)
+    w /= w.sum()
+    return {
+        "name": "gaussian",
+        "ins": [images],
+        "outs": [np.zeros_like(images)],
+        "args": [jnp.asarray(w)],
+        "kernel": gaussian_kernel,
+        "gws": n_images,
+        "lws": 16,
+        "cost_fn": None,  # regular
+        "reference": lambda: np.asarray(gaussian_kernel(0, jnp.asarray(images), jnp.asarray(w))),
+    }
+
+
+# ---------------------------------------------------------------- Binomial
+
+
+def binomial_kernel(offset, opts, steps):
+    """Binomial option pricing (work-item = option). opts: (n, 4)."""
+    del offset
+    s0, k_strike, t, vol = opts[:, 0], opts[:, 1], opts[:, 2], opts[:, 3]
+    r = 0.02
+    dt = t / steps
+    u = jnp.exp(vol * jnp.sqrt(dt))
+    d = 1.0 / u
+    p = (jnp.exp(r * dt) - d) / (u - d)
+    disc = jnp.exp(-r * dt)
+    j = jnp.arange(steps + 1, dtype=jnp.float32)
+    st = s0[:, None] * u[:, None] ** (steps - 2.0 * j[None, :])
+    val = jnp.maximum(st - k_strike[:, None], 0.0)
+
+    def back(i, v):
+        vv = disc[:, None] * (p[:, None] * v + (1 - p[:, None]) * jnp.roll(v, -1, axis=1))
+        return vv
+
+    val = jax.lax.fori_loop(0, steps, back, val)
+    return val[:, 0]
+
+
+def make_binomial(n_opts: int = 4096, steps: int = 254):
+    rng = np.random.default_rng(1)
+    opts = np.stack(
+        [
+            rng.uniform(20, 60, n_opts),
+            rng.uniform(20, 60, n_opts),
+            rng.uniform(0.5, 2.0, n_opts),
+            rng.uniform(0.1, 0.5, n_opts),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    # ``steps`` controls trip counts/shapes -> must be compile-time static:
+    # bake it into the kernel closure (the OpenCL version passes it as a
+    # kernel arg; XLA specializes on it instead).
+    def kernel(offset, opts):
+        return binomial_kernel(offset, opts, steps)
+
+    return {
+        "name": "binomial",
+        "ins": [opts],
+        "outs": [np.zeros(n_opts, np.float32)],
+        "args": [],
+        "kernel": kernel,
+        "gws": n_opts,
+        "lws": 64,
+        "cost_fn": None,
+        "reference": lambda: np.asarray(binomial_kernel(0, jnp.asarray(opts), steps)),
+    }
+
+
+# -------------------------------------------------------------- Mandelbrot
+
+
+MAND_ITERS = 512
+
+
+def mandelbrot_kernel(offset, c_points):
+    """Escape iterations (work-item = pixel). c_points: (n, 2)."""
+    del offset
+    c = c_points[:, 0] + 1j * c_points[:, 1]
+    z = jnp.zeros_like(c)
+    it = jnp.zeros(c.shape, jnp.int32)
+
+    def body(i, zi):
+        z, it = zi
+        alive = jnp.abs(z) <= 2.0
+        z = jnp.where(alive, z * z + c, z)
+        it = it + alive.astype(jnp.int32)
+        return z, it
+
+    z, it = jax.lax.fori_loop(0, MAND_ITERS, body, (z, it))
+    return it
+
+
+def make_mandelbrot(width: int = 512, height: int = 256):
+    xs = np.linspace(-2.2, 1.0, width)
+    ys = np.linspace(-1.2, 1.2, height)
+    grid = np.stack(np.meshgrid(xs, ys), axis=-1).reshape(-1, 2).astype(np.float32)
+    n = grid.shape[0]
+
+    # Host-side coarse cost model: true per-pixel iteration counts on a
+    # downsample — models the image-dependent irregularity for simulation.
+    coarse = grid[::64]
+    c = coarse[:, 0] + 1j * coarse[:, 1]
+    z = np.zeros_like(c)
+    it = np.zeros(c.shape, np.int64)
+    for _ in range(MAND_ITERS // 8):
+        alive = np.abs(z) <= 2.0
+        z[alive] = z[alive] ** 2 + c[alive]
+        it += alive
+    cost = np.maximum(it.astype(np.float64), 1.0)
+
+    def cost_fn(off_wi: int, size_wi: int) -> float:
+        lo, hi = off_wi // 64, max(off_wi // 64 + 1, (off_wi + size_wi) // 64)
+        return float(cost[lo:hi].mean() / cost.mean()) * size_wi
+
+    return {
+        "name": "mandelbrot",
+        "ins": [grid],
+        "outs": [np.zeros(n, np.int32)],
+        "args": [],
+        "kernel": mandelbrot_kernel,
+        "gws": n,
+        "lws": 128,
+        "cost_fn": cost_fn,
+        "reference": lambda: np.asarray(mandelbrot_kernel(0, jnp.asarray(grid))),
+    }
+
+
+# ------------------------------------------------------------------ NBody
+
+
+def nbody_kernel(offset, pos, vel, all_pos, dt, eps):
+    """One Euler step (work-item = body). pos/vel: (n, 4); all_pos: (N, 4)."""
+    del offset
+    p = pos[:, :3]
+    d = all_pos[None, :, :3] - p[:, None, :]  # (n, N, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps
+    inv_r3 = jnp.where(r2 > eps, r2 ** -1.5, 0.0)
+    acc = jnp.sum(d * (all_pos[None, :, 3] * inv_r3)[..., None], axis=1)
+    new_vel = vel[:, :3] + acc * dt
+    new_pos = p + new_vel * dt
+    return (
+        jnp.concatenate([new_pos, pos[:, 3:]], axis=1),
+        jnp.concatenate([new_vel, vel[:, 3:]], axis=1),
+    )
+
+
+def make_nbody(n_bodies: int = 8192):
+    rng = np.random.default_rng(2)
+    pos = rng.normal(size=(n_bodies, 4)).astype(np.float32)
+    pos[:, 3] = rng.uniform(0.5, 2.0, n_bodies)  # mass
+    vel = (rng.normal(size=(n_bodies, 4)) * 0.1).astype(np.float32)
+    dt, eps = np.float32(0.005), np.float32(500.0)
+    apos = jnp.asarray(pos)
+    return {
+        "name": "nbody",
+        "ins": [pos, vel],
+        "outs": [np.zeros_like(pos), np.zeros_like(vel)],
+        "args": [apos, dt, eps],
+        "kernel": nbody_kernel,
+        "gws": n_bodies,
+        "lws": 64,
+        "cost_fn": None,
+        "reference": lambda: tuple(
+            np.asarray(a) for a in nbody_kernel(0, jnp.asarray(pos), jnp.asarray(vel), apos, dt, eps)
+        ),
+    }
+
+
+# -------------------------------------------------------------------- Ray
+
+
+def ray_kernel(offset, dirs, spheres, light):
+    """Tiny sphere-scene raytracer with one shadow bounce (work-item = ray).
+
+    dirs: (n, 3) ray directions from origin; spheres: (S, 5) = (cx,cy,cz,r,albedo).
+    """
+    del offset
+    o = jnp.zeros(3, jnp.float32)
+    d = dirs / jnp.linalg.norm(dirs, axis=1, keepdims=True)
+    centers, radius, albedo = spheres[:, :3], spheres[:, 3], spheres[:, 4]
+    oc = o[None, None, :] - centers[None, :, :]  # (1, S, 3)
+    b = jnp.einsum("ns,nks->nk", d, jnp.broadcast_to(oc, (d.shape[0],) + oc.shape[1:]))
+    c = jnp.sum(oc * oc, axis=-1) - radius[None, :] ** 2
+    disc = b * b - c
+    hit = disc > 0
+    t = jnp.where(hit, -b - jnp.sqrt(jnp.maximum(disc, 0.0)), jnp.inf)
+    t = jnp.where(t > 1e-3, t, jnp.inf)
+    ti = jnp.argmin(t, axis=1)
+    tmin = jnp.take_along_axis(t, ti[:, None], axis=1)[:, 0]
+    hit_any = jnp.isfinite(tmin)
+    pt = d * jnp.where(hit_any, tmin, 0.0)[:, None]
+    n_vec = pt - centers[ti]
+    n_vec = n_vec / jnp.maximum(jnp.linalg.norm(n_vec, axis=1, keepdims=True), 1e-9)
+    l_dir = light[None, :] - pt
+    l_dir = l_dir / jnp.maximum(jnp.linalg.norm(l_dir, axis=1, keepdims=True), 1e-9)
+    diff = jnp.maximum(jnp.einsum("ns,ns->n", n_vec, l_dir), 0.0)
+    shade = albedo[ti] * (0.1 + 0.9 * diff)
+    return jnp.where(hit_any, shade, 0.02).astype(jnp.float32)
+
+
+def make_ray(width: int = 512, height: int = 256, scene: int = 1):
+    rng = np.random.default_rng(10 + scene)
+    n_spheres = 8 * scene
+    spheres = np.stack(
+        [
+            rng.uniform(-3, 3, n_spheres),
+            rng.uniform(-2, 2, n_spheres),
+            rng.uniform(4, 9, n_spheres),
+            rng.uniform(0.4, 1.2, n_spheres),
+            rng.uniform(0.3, 1.0, n_spheres),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    light = np.array([5.0, 5.0, 0.0], np.float32)
+    xs = np.linspace(-1.6, 1.6, width)
+    ys = np.linspace(-1.0, 1.0, height)
+    gx, gy = np.meshgrid(xs, ys)
+    dirs = np.stack([gx, gy, np.ones_like(gx)], axis=-1).reshape(-1, 3).astype(np.float32)
+    n = dirs.shape[0]
+    js, jl = jnp.asarray(spheres), jnp.asarray(light)
+
+    # Cost model: rows covering spheres are more expensive (hit shading).
+    ref_img = np.asarray(ray_kernel(0, jnp.asarray(dirs), js, jl))
+    coarse = np.maximum(ref_img[::64] * 8 + 1.0, 1.0)
+
+    def cost_fn(off_wi: int, size_wi: int) -> float:
+        lo, hi = off_wi // 64, max(off_wi // 64 + 1, (off_wi + size_wi) // 64)
+        return float(coarse[lo:hi].mean() / coarse.mean()) * size_wi
+
+    return {
+        "name": f"ray{scene}",
+        "ins": [dirs],
+        "outs": [np.zeros(n, np.float32)],
+        "args": [js, jl],
+        "kernel": ray_kernel,
+        "gws": n,
+        "lws": 128,
+        "cost_fn": cost_fn,
+        "reference": lambda: ref_img,
+    }
+
+
+ALL = {
+    "gaussian": make_gaussian,
+    "binomial": make_binomial,
+    "mandelbrot": make_mandelbrot,
+    "nbody": make_nbody,
+    "ray1": lambda: make_ray(scene=1),
+    "ray2": lambda: make_ray(scene=2),
+    "ray3": lambda: make_ray(scene=3),
+}

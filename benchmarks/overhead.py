@@ -1,0 +1,94 @@
+"""Paper Fig 7/8: EngineCL overhead vs native (single device, sizes sweep).
+
+Native = jit(kernel) called directly on the full buffers.
+EngineCL = same kernel through the full runtime (Program + Static scheduler,
+one package — the paper's worst case: all runtime machinery, zero co-exec
+benefit).  Overhead% = (T_ECL - T_native) / T_native * 100.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import DeviceGroup, EngineCL, Program, Static
+
+from benchmarks import kernels as K
+
+
+def _native_time(bench, iters: int) -> float:
+    """Native = jit kernel + the same host<->device traffic the runtime pays
+    (paper methodology: response time includes transfers both ways)."""
+    fn = jax.jit(bench["kernel"])
+    off = np.int32(0)
+    jax.block_until_ready(fn(off, *[jax.device_put(b) for b in bench["ins"]], *bench["args"]))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        ins = [jax.device_put(b) for b in bench["ins"]]
+        res = fn(off, *ins, *bench["args"])
+        res = res if isinstance(res, tuple) else (res,)
+        for out, r in zip(bench["outs"], res):
+            out[:] = np.asarray(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def _engine_time(bench, iters: int) -> float:
+    eng = EngineCL().use(DeviceGroup("cpu:0"))
+    prog = Program().kernel(bench["kernel"], bench["name"]).args(*bench["args"])
+    for b in bench["ins"]:
+        prog.in_(b)
+    for b in bench["outs"]:
+        prog.out(b)
+    prog.work_items(bench["gws"], bench["lws"])
+    eng.scheduler(Static()).program(prog)
+    eng.run()  # warm-up execution (paper methodology: discard first)
+    assert not eng.has_errors(), eng.get_errors()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        eng.run()
+    return (time.perf_counter() - t0) / iters
+
+
+# Paper methodology: minimum problem size ~1 s of execution per benchmark.
+SIZES = {
+    "gaussian": lambda: K.make_gaussian(2048, 64),
+    "binomial": lambda: K.make_binomial(8192, 254),
+    "mandelbrot": lambda: K.make_mandelbrot(1024, 512),
+    "nbody": lambda: K.make_nbody(8192),
+    "ray1": lambda: K.make_ray(1024, 512, scene=1),
+    "ray2": lambda: K.make_ray(1024, 512, scene=2),
+    "ray3": lambda: K.make_ray(1024, 512, scene=3),
+}
+
+
+def run(iters: int = 5, names=None) -> list[dict]:
+    rows = []
+    for name in names or list(SIZES):
+        bench = SIZES[name]()
+        tn = _native_time(bench, iters)
+        te = _engine_time(bench, iters)
+        rows.append(
+            {
+                "benchmark": name,
+                "native_ms": tn * 1e3,
+                "enginecl_ms": te * 1e3,
+                "overhead_pct": (te - tn) / tn * 100,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print(f"{'benchmark':12s} {'native_ms':>10s} {'enginecl_ms':>12s} {'overhead_%':>10s}")
+    for r in rows:
+        print(f"{r['benchmark']:12s} {r['native_ms']:10.2f} {r['enginecl_ms']:12.2f} "
+              f"{r['overhead_pct']:10.2f}")
+    avg = float(np.mean([r["overhead_pct"] for r in rows]))
+    print(f"{'average':12s} {'':10s} {'':12s} {avg:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

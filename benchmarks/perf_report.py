@@ -1,0 +1,71 @@
+"""§Perf assembly: baseline vs hillclimb-variant roofline terms per cell.
+
+Reads experiments/dryrun/<arch>__<shape>__pod16x16[__tag].json and prints
+markdown rows: terms before/after + deltas per iteration tag.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+CELLS = {
+    ("internlm2-20b", "decode_32k"): ["fd", "fd_fp8"],
+    ("kimi-k2-1t-a32b", "train_4k"): ["ep"],
+    ("granite-34b", "train_4k"): ["rd", "rdz", "fa"],
+    ("arctic-480b", "train_4k"): ["ep"],
+    ("kimi-k2-1t-a32b", "decode_32k"): ["fd"],
+    ("internlm2-20b", "train_4k"): ["rd"],
+}
+
+
+def load(d: Path, arch: str, shape: str, tag: str = "") -> dict | None:
+    suffix = f"__{tag}" if tag else ""
+    f = d / f"{arch}__{shape}__pod16x16{suffix}.json"
+    if not f.exists():
+        return None
+    r = json.loads(f.read_text())
+    return r if r.get("status") == "ok" else None
+
+
+def row(label: str, r: dict, base: dict | None = None) -> str:
+    rl = r["roofline"]
+    cells = []
+    for k in ("compute_s", "memory_s", "collective_s"):
+        v = rl[k]
+        if base is not None and base["roofline"][k] > 0:
+            ratio = base["roofline"][k] / v if v > 0 else float("inf")
+            cells.append(f"{v:.3e} ({ratio:.1f}x)" if ratio >= 1.05 else
+                         f"{v:.3e} ({1/ratio:.2f}x worse)" if ratio < 0.95 else f"{v:.3e} (~)")
+        else:
+            cells.append(f"{v:.3e}")
+    dom = rl["dominant"]
+    frac = rl["compute_s"] / max(rl.values() if False else [rl["compute_s"], rl["memory_s"], rl["collective_s"]])
+    return f"| {label} | {cells[0]} | {cells[1]} | {cells[2]} | {dom} | {frac:.4f} |"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    d = Path(args.dir)
+    for (arch, shape), tags in CELLS.items():
+        base = load(d, arch, shape)
+        if base is None:
+            print(f"### {arch} {shape}: baseline missing\n")
+            continue
+        print(f"### {arch} × {shape}\n")
+        print("| variant | compute (s) | memory (s) | collective (s) | dominant | roofline frac |")
+        print("|---|---|---|---|---|---|")
+        print(row("baseline (paper-faithful)", base))
+        for t in tags:
+            v = load(d, arch, shape, t)
+            if v is not None:
+                print(row(t, v, base))
+            else:
+                print(f"| {t} | (missing) |||||")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+For each (arch × shape × mesh): the three terms (compute/memory/collective,
+seconds), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio,
+and a one-line "what would move the dominant term" hint.
+
+Writes markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+HINTS = {
+    ("moe", "collective"): "shard MoE dispatch buffer over data axis / all-to-all instead of AG+RS on expert buffers",
+    ("moe", "memory"): "bf16 expert buffers + fuse gate/up einsums",
+    ("dense", "collective"): "switch attention scheme (heads vs hd sharding) to remove score all-reduces",
+    ("dense", "memory"): "less remat (dots policy), bf16 master grads, fuse norm+matmul",
+    ("ssm", "memory"): "Pallas fused selective scan (dA/dBx never hit HBM)",
+    ("hybrid", "memory"): "Pallas RG-LRU scan + wider chunks",
+    ("audio", "memory"): "batch-split microbatching; fuse LN+QKV",
+    ("vlm", "memory"): "same as dense; prefix attention tile skip",
+}
+
+
+def load(out_dir: Path) -> list[dict]:
+    rows = []
+    for f in sorted(out_dir.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def fraction(r: dict) -> float:
+    """Roofline fraction = compute term / max(all terms): 1.0 = compute-bound."""
+    rl = r["roofline"]
+    worst = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+    return rl["compute_s"] / worst if worst > 0 else 0.0
+
+
+def table(rows: list[dict], family_of: dict) -> str:
+    out = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | "
+        "roofline frac | useful FLOPs | hint |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR |||||||")
+            continue
+        rl = r["roofline"]
+        fam = family_of.get(r["arch"], "dense")
+        hint = HINTS.get((fam, rl["dominant"]), "rebalance sharding of the dominant tensor")
+        uf = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | **{rl['dominant']}** | "
+            f"{fraction(r):.3f} | {uf:.2f} | {hint} |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | **{rl['dominant']}** | "
+            f"{fraction(r):.3f} | n/a | {hint} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16", help="roofline table is single-pod per spec")
+    args = ap.parse_args()
+    from repro.configs import all_archs, get_config
+
+    family_of = {a: get_config(a).family for a in all_archs()}
+    rows = [r for r in load(Path(args.dir)) if r["mesh"] == args.mesh or r["status"] == "skipped"]
+    seen = set()
+    uniq = []
+    for r in rows:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        uniq.append(r)
+    print(table(uniq, family_of))
+
+    ok = [r for r in uniq if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=fraction)
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"] / max(r["roofline"]["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} {worst['shape']} ({fraction(worst):.4f})")
+        print(f"most collective-bound:  {coll['arch']} {coll['shape']} "
+              f"(coll/compute = {coll['roofline']['collective_s']/max(coll['roofline']['compute_s'],1e-12):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
+  - table3_usability : derived = raw/engine token ratio
+  - fig7_overhead    : us_per_call = engine time (us); derived = overhead %
+  - fig9_balance     : derived = mean balance per scheduler
+  - fig11_efficiency : derived = mean efficiency per scheduler
+  - roofline         : derived = roofline fraction per (arch, shape) cell
+
+Fast mode (default) uses reduced iteration counts so the full suite runs in
+minutes on the CI container; ``--full`` reproduces the paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def table3_usability(rows: list[str]) -> None:
+    from benchmarks import usability as U
+
+    e = U.metrics(U.ENGINECL_VERSION)
+    r = U.metrics(U.RAW_JAX_VERSION)
+    ratios = [r[k] / e[k] for k in e if e[k]]
+    rows.append(f"table3_usability_tok_ratio,0,{r['TOK'] / e['TOK']:.2f}")
+    rows.append(f"table3_usability_mean_ratio,0,{np.mean(ratios):.2f}")
+
+
+def fig7_overhead(rows: list[str], iters: int) -> None:
+    from benchmarks import overhead as O
+
+    res = O.run(iters=iters)
+    for rr in res:
+        rows.append(
+            f"fig7_overhead_{rr['benchmark']},{rr['enginecl_ms'] * 1e3:.0f},"
+            f"{rr['overhead_pct']:.2f}"
+        )
+    rows.append(f"fig7_overhead_mean,0,{np.mean([rr['overhead_pct'] for rr in res]):.2f}")
+
+
+def fig9_11_coexec(rows: list[str], target_seconds: float) -> None:
+    from benchmarks import coexec as C
+
+    res = C.run(target_seconds=target_seconds)
+    by_sched: dict = {}
+    for rr in res:
+        by_sched.setdefault(rr["scheduler"], []).append(rr)
+    for s, items in by_sched.items():
+        bal = np.mean([i["balance"] for i in items])
+        eff = np.mean([i["efficiency"] for i in items])
+        t = np.mean([i["coexec_s"] for i in items])
+        rows.append(f"fig9_balance_{s},{t * 1e6:.0f},{bal:.3f}")
+        rows.append(f"fig11_efficiency_{s},{t * 1e6:.0f},{eff:.3f}")
+
+
+def roofline(rows: list[str]) -> None:
+    import json
+    from pathlib import Path
+
+    from benchmarks.roofline import fraction
+
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        return
+    for f in sorted(d.glob("*__pod16x16.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        dom_s = max(r["roofline"][k] for k in ("compute_s", "memory_s", "collective_s"))
+        rows.append(f"roofline_{r['arch']}_{r['shape']},{dom_s * 1e6:.0f},{fraction(r):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tables", nargs="*", default=["usability", "overhead", "coexec", "roofline"])
+    args = ap.parse_args()
+
+    rows: list[str] = ["name,us_per_call,derived"]
+    if "usability" in args.tables:
+        table3_usability(rows)
+    if "overhead" in args.tables:
+        fig7_overhead(rows, iters=5 if args.full else 2)
+    if "coexec" in args.tables:
+        fig9_11_coexec(rows, target_seconds=2.0 if args.full else 0.75)
+    if "roofline" in args.tables:
+        roofline(rows)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

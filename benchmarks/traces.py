@@ -1,0 +1,50 @@
+"""Paper Fig 5/6: per-package traces (chunk size + time per device).
+
+Dumps the introspector's package stream as CSV per (benchmark, scheduler):
+device, offset, size, t_start, duration — the data behind the paper's
+package-distribution plots.
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from repro.core import EngineCL
+
+from benchmarks.coexec import SCHEDULERS, SIZES, build_program, make_groups, POWERS
+
+
+def trace(name: str, sched_name: str, target_seconds: float = 1.0) -> list[str]:
+    bench = SIZES[name]()
+    base_t = target_seconds / bench["gws"] * sum(POWERS.values())
+    groups = make_groups(base_t)
+    eng = EngineCL().use(*groups).scheduler(SCHEDULERS[sched_name]()).program(build_program(bench))
+    eng.run()
+    eng.run()
+    assert not eng.has_errors(), eng.get_errors()
+    lines = ["device,offset_wi,size_wi,t_start_s,duration_s"]
+    for r in sorted(eng.introspector.records, key=lambda r: r.t_start):
+        lines.append(
+            f"{r.device},{r.offset_wi},{r.size_wi},"
+            f"{r.t_start - eng.introspector.t_run_start:.4f},{r.seconds:.4f}"
+        )
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/traces")
+    ap.add_argument("--benchmarks", nargs="*", default=["gaussian", "mandelbrot"])
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for name in args.benchmarks:
+        for sched in SCHEDULERS:
+            lines = trace(name, sched)
+            f = out / f"{name}__{sched}.csv"
+            f.write_text("\n".join(lines))
+            print(f"{f}: {len(lines) - 1} packages")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Paper Table 3: usability metrics — EngineCL API vs raw JAX+manual
+co-execution for the same multi-device program.
+
+Metrics (paper §7.3 subset computable from source): TOK (python tokens),
+LOC (non-blank), INST (classes instantiated), MET (methods/calls used),
+ERRC (error-handling sections), CC (branch points + 1).
+
+The raw-JAX variant implements what the engine does by hand: discovery,
+static partitioning, per-device transfer, dispatch threads, result
+stitching and error collection — the honest equivalent of the paper's raw
+OpenCL baseline.
+"""
+from __future__ import annotations
+
+import io
+import tokenize
+
+ENGINECL_VERSION = '''
+import numpy as np
+from repro.core import DeviceGroup, EngineCL, HGuided, Program
+
+def run(kernel, x, y, gws, lws):
+    groups = [DeviceGroup("gpu", power=4.0), DeviceGroup("cpu", power=1.0)]
+    engine = EngineCL().use(*groups)
+    engine.scheduler(HGuided(k=2))
+    program = Program().in_(x).out(y).kernel(kernel).work_items(gws, lws)
+    engine.program(program)
+    engine.run()
+    if engine.has_errors():
+        raise RuntimeError(engine.get_errors())
+    return y
+'''
+
+RAW_JAX_VERSION = '''
+import threading
+import numpy as np
+import jax
+
+def run(kernel, x, y, gws, lws, powers=(4.0, 1.0)):
+    devices = jax.devices()
+    if not devices:
+        raise RuntimeError("no devices")
+    devices = (devices * 2)[:2]
+    total = sum(powers)
+    n_groups = gws // lws
+    shares = []
+    off = 0
+    for i, p in enumerate(powers):
+        g = int(round(n_groups * p / total)) if i < len(powers) - 1 else n_groups - off
+        shares.append((off * lws, g * lws))
+        off += g
+    compiled = {}
+    errors = []
+    results = {}
+
+    def worker(i, dev, off_wi, size_wi):
+        try:
+            if dev not in compiled:
+                compiled[dev] = jax.jit(kernel)
+            lo, hi = off_wi, off_wi + size_wi
+            if hi <= lo:
+                return
+            chunk = jax.device_put(x[lo:hi], dev)
+            out = compiled[dev](np.int32(off_wi), chunk)
+            jax.block_until_ready(out)
+            results[i] = (lo, hi, np.asarray(out))
+        except Exception as e:
+            errors.append((dev, e))
+
+    threads = []
+    for i, (dev, (off_wi, size_wi)) in enumerate(zip(devices, shares)):
+        t = threading.Thread(target=worker, args=(i, dev, off_wi, size_wi))
+        threads.append(t)
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise RuntimeError(errors)
+    for lo, hi, out in results.values():
+        y[lo:hi] = out
+    return y
+'''
+
+
+def metrics(src: str) -> dict:
+    toks = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    code_toks = [t for t in toks if t.type in (tokenize.NAME, tokenize.OP, tokenize.NUMBER,
+                                               tokenize.STRING)]
+    loc = len({t.start[0] for t in code_toks})
+    names = [t.string for t in code_toks if t.type == tokenize.NAME]
+    branch_kw = sum(1 for n in names if n in ("if", "for", "while", "and", "or", "elif"))
+    errc = sum(1 for n in names if n in ("try", "except", "raise", "assert"))
+    calls = sum(1 for a, b in zip(code_toks, code_toks[1:])
+                if a.type == tokenize.NAME and b.string == "(")
+    insts = sum(1 for a, b in zip(code_toks, code_toks[1:])
+                if a.type == tokenize.NAME and a.string[0].isupper() and b.string == "(")
+    return {"TOK": len(code_toks), "LOC": loc, "CC": branch_kw + 1, "MET": calls,
+            "INST": insts, "ERRC": errc}
+
+
+def main() -> None:
+    e = metrics(ENGINECL_VERSION)
+    r = metrics(RAW_JAX_VERSION)
+    print(f"{'metric':6s} {'raw-jax':>8s} {'enginecl':>9s} {'ratio':>6s}")
+    for k in e:
+        ratio = r[k] / e[k] if e[k] else float("inf")
+        print(f"{k:6s} {r[k]:8d} {e[k]:9d} {ratio:6.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Tier-2 ``DeviceGroup``: the co-execution unit.
+
+In the paper a Device wraps one OpenCL device and its command queue/thread.
+Here a DeviceGroup wraps a set of JAX devices (one chip, a host slice, or a
+whole pod sub-mesh) plus scheduling metadata: a relative compute ``power``,
+a minimum package size and an optional *specialized kernel* (the paper's
+per-device kernel source/binary → a per-group jit variant).
+
+``sim_flops`` emulates heterogeneous compute capacity on the single-CPU CI
+container (used by the load-balancing benchmarks): after the real kernel
+runs, the group idles to match a device of the given throughput.  Overhead
+benchmarks never set it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def jnp_int32(x: int):
+    return np.int32(x)
+
+
+class DeviceGroup:
+    def __init__(
+        self,
+        name: str,
+        devices: Optional[Sequence[jax.Device]] = None,
+        *,
+        power: float = 1.0,
+        min_package_groups: int = 1,
+        kernel: Optional[Callable] = None,
+        sim_time_per_wi: float = 0.0,
+    ) -> None:
+        self.name = name
+        self.devices = list(devices) if devices else [jax.devices()[0]]
+        self.power = power
+        self.min_package_groups = min_package_groups
+        self.specialized_kernel = kernel
+        self.sim_time_per_wi = sim_time_per_wi
+        self._compiled: dict[Any, Callable] = {}
+        self._sim_clock = 0.0  # simulated completion time of the last package
+
+    @property
+    def device(self) -> jax.Device:
+        return self.devices[0]
+
+    def compile_kernel(self, program) -> Callable:
+        """Per-group jit of the (possibly specialized) kernel."""
+        fn = self.specialized_kernel or program._kernel
+        key = (id(fn), program._kernel_name)
+        if key not in self._compiled:
+            # Placement follows the device_put inputs, so one jit per group
+            # suffices (computation runs where its operands live).
+            self._compiled[key] = jax.jit(fn)
+        return self._compiled[key]
+
+    @staticmethod
+    def _bucket(size_wi: int, lws: int) -> int:
+        """Round a package up to a power-of-two number of work-groups.
+
+        XLA specializes executables on shapes (unlike OpenCL NDRanges), so
+        variable package sizes (HGuided!) would recompile per size.  Bucketing
+        caps compilations at log2(max_groups) per device; the tail is padded
+        and trimmed on write-back.
+        """
+        groups = -(-size_wi // lws)
+        return lws * (1 << max(0, (groups - 1).bit_length()))
+
+    def execute_chunk(self, program, offset_wi: int, size_wi: int):
+        """Run one package; returns device arrays (async, not blocked).
+
+        Inputs are padded to the bucket size; callers must trim outputs to
+        ``size_wi`` (Program.write_outputs does).
+        """
+        fn = self.compile_kernel(program)
+        bucket = self._bucket(size_wi, program.lws)
+        ins = program.slice_inputs(offset_wi, size_wi)
+        if bucket != size_wi:
+            padded = []
+            for b, orig in zip(ins, program._ins):
+                r = program.buffer_ratio(orig)
+                need = int(r * bucket) - len(b)
+                padded.append(np.pad(np.asarray(b), [(0, need)] + [(0, 0)] * (b.ndim - 1)))
+            ins = padded
+        ins = [jax.device_put(b, self.device) for b in ins]
+        # offset passed as a traced scalar: no recompile per package.
+        res = fn(jnp_int32(offset_wi), *ins, *program._args)
+        return res
+
+    def simulate_service_time(self, size_wi: int, elapsed: float,
+                              cost_units: Optional[float] = None) -> None:
+        """Pad to the service time a device of this speed would need.
+
+        A real device computes packages *serially*, so the simulated clock
+        advances from the later of (previous simulated completion, actual
+        package start) — otherwise pipelined dispatch would let sleeps
+        overlap and produce impossible >S_max speedups.
+
+        ``cost_units`` (defaults to size_wi) lets irregular kernels charge
+        content-dependent work (Program.cost_fn)."""
+        if self.sim_time_per_wi <= 0:
+            return
+        target = (cost_units if cost_units is not None else size_wi) * self.sim_time_per_wi
+        now = time.perf_counter()
+        start = max(self._sim_clock, now - elapsed)
+        end = start + target
+        if end > now:
+            time.sleep(end - now)
+            self._sim_clock = end
+        else:
+            self._sim_clock = now
+
+    def __repr__(self) -> str:
+        return f"DeviceGroup({self.name!r}, power={self.power}, n={len(self.devices)})"

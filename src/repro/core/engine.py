@@ -1,0 +1,209 @@
+"""Tier-1 ``EngineCL`` facade.
+
+Mirrors the paper's API (§6) on JAX:
+
+    engine = EngineCL()
+    engine.use(DeviceMask.ALL)                      # or explicit DeviceGroups
+    engine.scheduler(HGuided(k=2))
+    program = Program().in_(x).out(y).kernel(fn)
+    engine.program(program)
+    engine.run()                                    # co-executes on all groups
+
+Runtime architecture = the paper's multi-threaded design: one dispatcher
+thread per device group pulls packages from the (thread-safe) scheduler,
+enqueues transfer + compute asynchronously (JAX async dispatch ≙ OpenCL
+event chaining), blocks only on completion, writes results into the host
+output buffers and reports timing to the Introspector and the scheduler
+(adaptive rating).
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+import traceback
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core.device import DeviceGroup
+from repro.core.introspector import Introspector, PackageRecord
+from repro.core.program import Program
+from repro.core.scheduler.base import Scheduler
+from repro.core.scheduler.static import Static
+
+
+class DeviceMask(enum.Flag):
+    CPU = enum.auto()
+    GPU = enum.auto()
+    TPU = enum.auto()
+    ALL = CPU | GPU | TPU
+
+
+def discover(mask: DeviceMask = DeviceMask.ALL) -> List[DeviceGroup]:
+    """Platform/device discovery (paper challenge 1) — one group per device."""
+    kinds = {
+        DeviceMask.CPU: ("cpu",),
+        DeviceMask.GPU: ("gpu", "cuda", "rocm"),
+        DeviceMask.TPU: ("tpu",),
+    }
+    wanted = tuple(
+        p for flag, plats in kinds.items() if flag in mask for p in plats
+    )
+    groups = []
+    for d in jax.devices():
+        if d.platform in wanted:
+            groups.append(DeviceGroup(f"{d.platform}:{d.id}", [d]))
+    return groups
+
+
+class EngineCL:
+    def __init__(self) -> None:
+        self._groups: List[DeviceGroup] = []
+        self._scheduler: Scheduler = Static()
+        self._program: Optional[Program] = None
+        self._errors: List[str] = []
+        self.introspector = Introspector()
+        self._gws: Optional[int] = None
+        self._lws: Optional[int] = None
+        self._pipeline_depth = 2  # packages enqueued ahead per device
+
+    # ----------------------------------------------------------- Tier-1 API
+    def use(self, *what) -> "EngineCL":
+        """DeviceMask, DeviceGroup(s), or a Program."""
+        for w in what:
+            if isinstance(w, DeviceMask):
+                self._groups.extend(discover(w))
+            elif isinstance(w, DeviceGroup):
+                self._groups.append(w)
+            elif isinstance(w, Program):
+                self._program = w
+            else:
+                raise TypeError(f"cannot use({w!r})")
+        return self
+
+    def program(self, program: Program) -> "EngineCL":
+        self._program = program
+        return self
+
+    def scheduler(self, sched: Scheduler) -> "EngineCL":
+        self._scheduler = sched
+        return self
+
+    def global_work_items(self, gws: int) -> "EngineCL":
+        self._gws = gws
+        return self
+
+    def local_work_items(self, lws: int) -> "EngineCL":
+        self._lws = lws
+        return self
+
+    def work_items(self, gws: int, lws: int = 1) -> "EngineCL":
+        self._gws, self._lws = gws, lws
+        return self
+
+    # ---- paper §10 future work: multi-kernel & iterative execution ------
+    def run_pipeline(self, *programs: Program) -> "EngineCL":
+        """Run several Programs back-to-back (multi-kernel execution).
+
+        Programs share host buffers by construction (pass one program's out
+        array as the next one's in_) — the paper's 'linked buffers' idea."""
+        for p in programs:
+            self.program(p).run()
+            if self.has_errors():
+                break
+        return self
+
+    def run_iterative(self, n_iters: int, swap: Optional[Sequence[tuple]] = None) -> "EngineCL":
+        """Iterative kernels (e.g. NBody steps): re-run the current program
+        ``n_iters`` times; ``swap`` lists (in_index, out_index) buffer pairs
+        ping-ponged between iterations (device-resident state would be the
+        TPU-side optimization; host ping-pong matches the paper's model)."""
+        prog = self._program
+        if prog is None:
+            self._errors.append("no program set")
+            return self
+        for _ in range(n_iters):
+            self.run()
+            if self.has_errors():
+                break
+            if swap:
+                for i_in, i_out in swap:
+                    prog._ins[i_in], prog._outs[i_out] = (
+                        prog._outs[i_out],
+                        np.ascontiguousarray(prog._ins[i_in]),
+                    )
+        return self
+
+    def has_errors(self) -> bool:
+        return bool(self._errors)
+
+    def get_errors(self) -> List[str]:
+        return list(self._errors)
+
+    # ------------------------------------------------------------- run loop
+    def run(self) -> "EngineCL":
+        prog = self._program
+        self._errors = []
+        if prog is None:
+            self._errors.append("no program set")
+            return self
+        if not self._groups:
+            self._groups = discover(DeviceMask.ALL)
+        if self._gws is not None:
+            prog.gws = self._gws
+        if self._lws is not None:
+            prog.lws = self._lws
+        errs = prog.validate()
+        if errs:
+            self._errors.extend(errs)
+            return self
+
+        sched = self._scheduler
+        sched.prepare(prog.n_work_groups, prog.lws, self._groups)
+        self.introspector.start_run()
+
+        threads = [
+            threading.Thread(target=self._device_worker, args=(g, prog, sched), daemon=True)
+            for g in self._groups
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self.introspector.end_run()
+        return self
+
+    def _device_worker(self, group: DeviceGroup, prog: Program, sched: Scheduler) -> None:
+        """Paper's Device thread: pull → enqueue (async) → complete → write."""
+        pending: list = []  # (offset, size, result, t_enqueue, t_start)
+        try:
+            while True:
+                pkg = sched.next_package(group)
+                if pkg is not None:
+                    off, size = pkg
+                    t_enq = time.perf_counter()
+                    res = group.execute_chunk(prog, off, size)  # async dispatch
+                    pending.append((off, size, res, t_enq))
+                if pkg is None and not pending:
+                    break
+                # Block on the oldest package once the pipeline is full (or
+                # the stream ended) — transfers/compute of newer packages
+                # overlap with this wait.
+                if pending and (len(pending) >= self._pipeline_depth or pkg is None):
+                    off, size, res, t_enq = pending.pop(0)
+                    t_start = t_enq  # async: service time measured to completion
+                    jax.block_until_ready(res)
+                    t_end = time.perf_counter()
+                    cost = prog.cost_fn(off, size) if prog.cost_fn else None
+                    group.simulate_service_time(size, t_end - t_start, cost)
+                    t_end = time.perf_counter()
+                    prog.write_outputs(off, size, res)
+                    self.introspector.record(
+                        PackageRecord(group.name, off, size, t_enq, t_start, t_end)
+                    )
+                    sched.observe(group, size, t_end - t_start)
+        except Exception:  # noqa: BLE001 — surfaced via engine error API
+            self._errors.append(f"{group.name}: {traceback.format_exc()}")

@@ -1,0 +1,106 @@
+"""Introspector: per-package execution traces + the paper's metrics.
+
+Records every package (device, offset, size, enqueue/start/end times) and
+derives the validation metrics of §7.3/§8:
+
+    balance    = T_FD / T_LD          (first-finisher / last-finisher)
+    speedup    = T_baseline / T_coexec
+    S_max      = sum(T_i) / max(T_i)   (per single-device response times)
+    efficiency = S_real / S_max
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class PackageRecord:
+    device: str
+    offset_wi: int
+    size_wi: int
+    t_enqueue: float
+    t_start: float
+    t_end: float
+
+    @property
+    def seconds(self) -> float:
+        return self.t_end - self.t_start
+
+
+class Introspector:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.records: List[PackageRecord] = []
+        self.t_run_start: float = 0.0
+        self.t_run_end: float = 0.0
+
+    def start_run(self) -> None:
+        with self._lock:
+            self.records = []
+            self.t_run_start = time.perf_counter()
+
+    def end_run(self) -> None:
+        self.t_run_end = time.perf_counter()
+
+    def record(self, rec: PackageRecord) -> None:
+        with self._lock:
+            self.records.append(rec)
+
+    # ------------------------------------------------------------ metrics
+    @property
+    def response_time(self) -> float:
+        return self.t_run_end - self.t_run_start
+
+    def per_device(self) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        for r in self.records:
+            d = out.setdefault(
+                r.device,
+                {"packages": 0, "work_items": 0, "busy": 0.0, "finish": 0.0, "chunks": []},
+            )
+            d["packages"] += 1
+            d["work_items"] += r.size_wi
+            d["busy"] += r.seconds
+            d["finish"] = max(d["finish"], r.t_end - self.t_run_start)
+            d["chunks"].append((r.offset_wi, r.size_wi, r.t_start - self.t_run_start, r.seconds))
+        return out
+
+    def balance(self) -> float:
+        per = self.per_device()
+        if len(per) < 2:
+            return 1.0
+        finishes = [d["finish"] for d in per.values()]
+        return min(finishes) / max(finishes) if max(finishes) > 0 else 1.0
+
+    def work_share(self) -> Dict[str, float]:
+        per = self.per_device()
+        tot = sum(d["work_items"] for d in per.values()) or 1
+        return {k: d["work_items"] / tot for k, d in per.items()}
+
+    def summary(self) -> dict:
+        return {
+            "response_time": self.response_time,
+            "balance": self.balance(),
+            "work_share": self.work_share(),
+            "per_device": {
+                k: {kk: vv for kk, vv in v.items() if kk != "chunks"}
+                for k, v in self.per_device().items()
+            },
+            "n_packages": len(self.records),
+        }
+
+
+def coexec_metrics(device_times: Dict[str, float], coexec_time: float) -> dict:
+    """speedup / S_max / efficiency given single-device baselines."""
+    t_fastest = min(device_times.values())
+    s_max = sum(t_fastest / t for t in device_times.values())
+    s_real = t_fastest / coexec_time if coexec_time > 0 else 0.0
+    return {
+        "baseline_device": min(device_times, key=device_times.get),
+        "speedup": s_real,
+        "s_max": s_max,
+        "efficiency": s_real / s_max if s_max > 0 else 0.0,
+    }

@@ -1,0 +1,132 @@
+"""Tier-1 ``Program``: the application-domain unit of EngineCL.
+
+A Program owns input/output buffers, a data-parallel kernel and an
+*out pattern* — exactly the paper's abstraction (§4.2).  The kernel is any
+JAX function over chunk slices:
+
+    program = Program()
+    program.in_(x)                      # host buffers (numpy or jax arrays)
+    program.out(y)
+    program.out_pattern(1, 255)         # 1 output element per 255 work-items
+    program.kernel(fn, "binomial")      # fn(offset, *in_slices) -> out slices
+
+The leading axis of every buffer is the data-parallel axis.  Buffer lengths
+relate to the global work size through their own ratio (len / gws), so
+buffers of different granularity (e.g. Binomial's 1:255) partition
+consistently — the runtime slices work-items, never raw indices.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+
+class Program:
+    def __init__(self) -> None:
+        self._ins: list[Any] = []
+        self._outs: list[Any] = []
+        self._kernel: Optional[Callable] = None
+        self._kernel_name: str = "kernel"
+        self._args: list[Any] = []
+        self._out_pattern = Fraction(1, 1)  # out elems per work-item
+        self.gws: Optional[int] = None
+        self.lws: int = 1
+        # Optional relative-cost model f(offset_wi, size_wi) -> work units
+        # (default: size).  Used only by simulated-heterogeneity DeviceGroups
+        # to model irregular kernels (Mandelbrot/Ray) on the CI container.
+        self.cost_fn: Optional[Callable[[int, int], float]] = None
+
+    # -- buffers ---------------------------------------------------------
+    def in_(self, buf) -> "Program":
+        self._ins.append(buf)
+        return self
+
+    def out(self, buf) -> "Program":
+        self._outs.append(np.asarray(buf))
+        return self
+
+    def out_pattern(self, out_elems: int, work_items: int = 1) -> "Program":
+        """``out_elems`` output indices written per ``work_items`` work-items."""
+        self._out_pattern = Fraction(out_elems, work_items)
+        return self
+
+    # -- kernel ----------------------------------------------------------
+    def kernel(self, fn: Callable, name: str = "kernel") -> "Program":
+        """fn(offset:int, *in_slices, *args) -> out slice (or tuple of)."""
+        self._kernel = fn
+        self._kernel_name = name
+        return self
+
+    def args(self, *args) -> "Program":
+        self._args = list(args)
+        return self
+
+    def arg(self, a) -> "Program":
+        self._args.append(a)
+        return self
+
+    # -- geometry --------------------------------------------------------
+    def global_work_items(self, gws: int) -> "Program":
+        self.gws = gws
+        return self
+
+    def local_work_items(self, lws: int) -> "Program":
+        self.lws = lws
+        return self
+
+    def work_items(self, gws: int, lws: int = 1) -> "Program":
+        self.gws, self.lws = gws, lws
+        return self
+
+    # -- runtime-facing helpers (Tier-3) ----------------------------------
+    def validate(self) -> list[str]:
+        errs = []
+        if self._kernel is None:
+            errs.append("no kernel set")
+        if self.gws is None:
+            # Default: gws = leading dim of the first output / out_pattern.
+            if self._outs:
+                self.gws = int(Fraction(len(self._outs[0]), 1) / self._out_pattern)
+            else:
+                errs.append("no gws and no output buffer to infer it from")
+        if self.gws is not None and self.lws and self.gws % self.lws:
+            errs.append(f"gws {self.gws} not a multiple of lws {self.lws}")
+        for i, b in enumerate(self._ins + self._outs):
+            r = Fraction(len(b)) / self.gws
+            if (r * self.lws).denominator != 1:
+                errs.append(f"buffer {i}: length {len(b)} not compatible with gws/lws")
+        return errs
+
+    def buffer_ratio(self, buf) -> Fraction:
+        return Fraction(len(buf), self.gws)
+
+    def slice_inputs(self, offset_wi: int, size_wi: int) -> list:
+        """Slice every input buffer for a work-item range."""
+        out = []
+        for b in self._ins:
+            r = self.buffer_ratio(b)
+            lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
+            out.append(b[lo:hi])
+        return out
+
+    def write_outputs(self, offset_wi: int, size_wi: int, results: Sequence) -> None:
+        if not isinstance(results, (tuple, list)):
+            results = (results,)
+        if len(results) != len(self._outs):
+            raise ValueError(
+                f"kernel returned {len(results)} outputs, program has {len(self._outs)}"
+            )
+        for b, res in zip(self._outs, results):
+            r = self.buffer_ratio(b)
+            lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
+            b[lo:hi] = np.asarray(res)[: hi - lo]  # trim bucket padding
+
+    @property
+    def n_work_groups(self) -> int:
+        return self.gws // self.lws
+
+    @property
+    def outputs(self) -> list:
+        return self._outs

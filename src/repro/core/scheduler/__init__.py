@@ -1,0 +1,4 @@
+from repro.core.scheduler.base import Scheduler  # noqa: F401
+from repro.core.scheduler.dynamic import Dynamic  # noqa: F401
+from repro.core.scheduler.hguided import HGuided  # noqa: F401
+from repro.core.scheduler.static import Static  # noqa: F401

@@ -1,0 +1,58 @@
+"""Scheduler strategy interface (Tier-3, Strategy pattern).
+
+A scheduler hands out *packages* — contiguous work-item ranges, always in
+whole work-groups — to device groups.  The engine drives it from one thread
+per device; ``next_package`` must therefore be thread-safe (the base class
+provides the lock and remaining-work bookkeeping).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class Scheduler:
+    name = "base"
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._remaining = 0  # work-groups not yet handed out
+        self._next_group = 0
+        self._lws = 1
+        self._devices = []
+
+    # -- lifecycle ---------------------------------------------------------
+    def prepare(self, total_groups: int, lws: int, devices) -> None:
+        with self._lock:
+            self._remaining = total_groups
+            self._next_group = 0
+            self._lws = lws
+            self._devices = list(devices)
+            self._prepare()
+
+    def _prepare(self) -> None:  # subclass hook (lock held)
+        pass
+
+    # -- package stream ------------------------------------------------------
+    def next_package(self, device) -> Optional[tuple[int, int]]:
+        """Returns (offset_wi, size_wi) or None when exhausted."""
+        with self._lock:
+            if self._remaining <= 0:
+                return None
+            groups = self._package_groups(device)
+            groups = max(1, min(groups, self._remaining))
+            off = self._next_group
+            self._next_group += groups
+            self._remaining -= groups
+            return off * self._lws, groups * self._lws
+
+    def _package_groups(self, device) -> int:  # subclass hook (lock held)
+        raise NotImplementedError
+
+    # -- adaptive powers ----------------------------------------------------
+    def observe(self, device, size_wi: int, seconds: float) -> None:
+        """Optional feedback after each completed package (adaptive)."""
+
+    @property
+    def total_power(self) -> float:
+        return sum(d.power for d in self._devices)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import ShardedLoader, SyntheticTokens  # noqa: F401

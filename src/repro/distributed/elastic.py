@@ -1,0 +1,83 @@
+"""Elastic pod management: survive pod loss without operator action.
+
+Fleet model: device groups = pods (the EngineCL analogy at rack scale).
+On pod failure the runtime (1) rebuilds the largest valid mesh from the
+surviving devices, (2) restores the latest checkpoint with the new mesh's
+shardings (restore_checkpoint already re-shards host-side), (3) re-rates
+scheduler powers so the engine's partitioner sees the new fleet.
+
+``plan_remesh`` is pure logic (unit-testable on CPU); ``ElasticRunner``
+wires it to the checkpoint manager and train step factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.ckpt import latest_step, restore_checkpoint
+from repro.distributed.sharding import set_current_mesh, spec_tree_shardings
+from repro.launch.mesh import make_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+    n_devices: int
+
+
+def plan_remesh(n_devices: int, *, model_par: int, prefer_pods: bool = True) -> MeshPlan:
+    """Largest mesh covering <= n_devices with a fixed model axis.
+
+    Keeps `model` (tensor-parallel degree is a property of the model
+    sharding, not the fleet) and gives the rest to data/pod axes — dropping
+    stragglers beyond the largest power-of-two data extent.
+    """
+    if n_devices < model_par:
+        raise ValueError(f"{n_devices} devices cannot host model_par={model_par}")
+    data_total = n_devices // model_par
+    # Largest power-of-two data extent (collectives want powers of two).
+    data = 1 << (data_total.bit_length() - 1)
+    if prefer_pods and data >= 2:
+        return MeshPlan((2, data // 2, model_par), ("pod", "data", "model"), 2 * (data // 2) * model_par)
+    return MeshPlan((data, model_par), ("data", "model"), data * model_par)
+
+
+class ElasticRunner:
+    """Builds (mesh, state, step_fn) and rebuilds them after failures."""
+
+    def __init__(self, cfg, api, *, state_spec_fn: Callable, step_factory: Callable,
+                 ckpt_dir: str, model_par: int) -> None:
+        self.cfg = cfg
+        self.api = api
+        self.state_spec_fn = state_spec_fn
+        self.step_factory = step_factory
+        self.ckpt_dir = ckpt_dir
+        self.model_par = model_par
+        self.mesh = None
+        self.state = None
+        self.step_fn = None
+
+    def build(self, devices: Optional[Sequence] = None):
+        """(Re)build mesh + restore state for the surviving device set."""
+        devices = list(devices if devices is not None else jax.devices())
+        plan = plan_remesh(len(devices), model_par=min(self.model_par, len(devices)))
+        self.mesh = make_mesh(plan.shape, plan.axes)
+        set_current_mesh(self.mesh)
+        sspec = self.state_spec_fn(self.cfg, plan)
+        shardings = spec_tree_shardings(sspec, self.mesh)
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.ckpt_dir}")
+        from repro.models.params import abstract
+
+        like = abstract(sspec, self.cfg.param_dtype)
+        self.state, extra = restore_checkpoint(self.ckpt_dir, step, like, shardings)
+        self.step_fn = jax.jit(self.step_factory(self.cfg, self.api))
+        return self.mesh, self.state, extra
+
+    def on_failure(self, surviving_devices: Sequence):
+        """Pod lost: rebuild on the survivors from the last checkpoint."""
+        return self.build(surviving_devices)

@@ -1,0 +1,9 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret=True`` executes the kernel bodies in Python on CPU (correctness
+validation in this container); on real TPU pass interpret=False (default).
+Models select the path via cfg.kernel_impl.
+"""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
+from repro.kernels.ssm_scan import ssm_scan  # noqa: F401

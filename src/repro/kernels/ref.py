@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0, q_offset: int = 0):
+    """O(S^2) reference attention. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    if n_rep > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (b, sk, kv, n_rep, hd)).reshape(b, sk, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (b, sk, kv, n_rep, hd)).reshape(b, sk, h, hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def ssm_scan_ref(dt, x, b_mat, c_mat, a, h0):
+    """Mamba selective scan, sequential ground truth.
+
+    dt/x: (B,S,di) [dt already softplus'd]; b_mat/c_mat: (B,S,N);
+    a: (di,N) negative; h0: (B,di,N) fp32.  Returns (y (B,S,di) f32, h_last).
+    """
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    def step(h, ts):
+        dt_t, x_t, b_t, c_t = ts
+        da = jnp.exp(dt_t[..., None] * a)  # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (dtf.transpose(1, 0, 2), xf.transpose(1, 0, 2), bf.transpose(1, 0, 2), cf.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2), h_last
+
+
+def rglru_scan_ref(a, b, h0):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t (all fp32).
+
+    a/b: (B,S,W); h0: (B,W). Returns (hs (B,S,W), h_last)."""
+    def step(h, ts):
+        a_t, b_t = ts
+        h = a_t * h + b_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.astype(jnp.float32).transpose(1, 0, 2), b.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2), h_last

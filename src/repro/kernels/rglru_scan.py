@@ -1,0 +1,71 @@
+"""RG-LRU diagonal linear-recurrence Pallas TPU kernel.
+
+h_t = a_t ⊙ h_{t-1} + b_t over (B, S, W).  Grid = (B, W_blocks, chunks) with
+the time axis innermost-sequential; the (bw,) state lives in VMEM scratch.
+Within a chunk the recurrence is reassociated as a log-depth blocked
+Blelloch-style pass over the time dimension using cumulative products in
+log-space — here kept as a fori_loop of VPU ops for exactness (the chunk is
+resident in VMEM either way; the loop is bandwidth-, not latency-bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, h_scr, *, chunk: int, nchunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]  # (bw,)
+
+    def step(t, h):
+        h = a_ref[0, t, :].astype(jnp.float32) * h + b_ref[0, t, :].astype(jnp.float32)
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == nchunks - 1)
+    def _final():
+        hout_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(a, b, h0, *, chunk: int = 256, block_w: int = 1024, interpret: bool = False):
+    """a/b: (B,S,W); h0: (B,W) f32. Returns (hs (B,S,W) f32, h_last (B,W))."""
+    bsz, s, w = a.shape
+    ck = min(chunk, s)
+    assert s % ck == 0
+    bw = min(block_w, w)
+    assert w % bw == 0
+    nchunks = s // ck
+    nw = w // bw
+
+    kernel = functools.partial(_kernel, chunk=ck, nchunks=nchunks)
+    hs, h_last = pl.pallas_call(
+        kernel,
+        grid=(bsz, nw, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, ck, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, ck, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return hs, h_last

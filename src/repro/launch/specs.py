@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns (abstract_tree, logical_pspec_tree) for
+the *step inputs* of that cell kind:
+
+    train   : {"tokens": (B, S) i32}  (+patches/frames for vlm/audio)
+    prefill : same as train (prompt batch)
+    decode  : {"token": (B, 1) i32, "pos": () i32}  — cache comes separately
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+def effective_seq(cfg: ModelConfig, shape: ShapeCell) -> int:
+    s = shape.seq_len
+    if cfg.max_decode_ctx:
+        s = min(s, cfg.max_decode_ctx)
+    return s
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell):
+    b = shape.global_batch
+    s = effective_seq(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        abstract = {"tokens": _sds((b, s), "int32")}
+        pspec = {"tokens": ("batch", None)}
+        if cfg.family == "vlm":
+            abstract["patches"] = _sds((b, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+            pspec["patches"] = ("batch", None, None)
+        if cfg.family == "audio":
+            abstract["frames"] = _sds((b, cfg.enc_frames, cfg.d_model), cfg.compute_dtype)
+            pspec["frames"] = ("batch", None, None)
+        return abstract, pspec
+    if shape.kind == "decode":
+        return (
+        {"token": _sds((b, 1), "int32"), "pos": _sds((), "int32")},
+        {"token": ("batch", None), "pos": ()},
+        )
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeCell, key, batch_override: int | None = None):
+    """Materialize a synthetic batch matching input_specs (smoke/examples)."""
+    import numpy as np
+
+    b = batch_override or shape.global_batch
+    s = effective_seq(cfg, shape)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_patches, cfg.d_model)), jnp.dtype(cfg.compute_dtype)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_frames, cfg.d_model)), jnp.dtype(cfg.compute_dtype)
+        )
+    return batch

@@ -1,0 +1,36 @@
+"""Model zoo registry: uniform API over all families.
+
+    api = get_model(cfg)
+    api.param_spec(cfg, par)              -> Spec tree
+    api.cache_spec(cfg, batch, seq, par)  -> Spec tree (decode caches)
+    api.forward_train(params, batch, cfg) -> scalar loss
+    api.prefill(params, batch, cfg, cache)-> (logits, cache)
+    api.decode(params, token, pos, cfg, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+
+class ModelAPI(NamedTuple):
+    param_spec: Callable
+    cache_spec: Callable
+    forward_train: Callable
+    prefill: Callable
+    decode: Callable
+
+
+def get_model(cfg) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm", "ssm"):
+        from repro.models import transformer as T
+
+        return ModelAPI(T.param_spec, T.cache_spec, T.forward_train, T.prefill, T.decode)
+    if cfg.family == "hybrid":
+        from repro.models import rglru as R
+
+        return ModelAPI(R.param_spec, R.cache_spec, R.forward_train, R.prefill, R.decode)
+    if cfg.family == "audio":
+        from repro.models import whisper as W
+
+        return ModelAPI(W.param_spec, W.cache_spec, W.forward_train, W.prefill, W.decode)
+    raise ValueError(f"unknown family {cfg.family!r}")

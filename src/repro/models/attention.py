@@ -1,0 +1,263 @@
+"""Attention block: projections, RoPE, KV cache, sharding-scheme selection.
+
+Tensor-parallel scheme is chosen per config by divisibility against the model
+axis (``par``):
+
+- ``heads``  : q-heads AND kv-heads both divisible → everything head-sharded,
+               zero attention collectives (Megatron style).
+- ``qheads`` : only q-heads divisible (GQA, kv < par) → q/wo head-sharded,
+               k/v replicated across the model axis.
+- ``hd``     : heads not divisible but head_dim is → shard head_dim; QK^T
+               contracts a sharded dim (partial-sum all-reduce on scores).
+- ``none``   : replicate.
+
+The baseline dry-run uses this static choice; §Perf hillclimbs revisit it
+(e.g. sequence-sharded KV cache + flash-decode combine for decode cells).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import layers as L
+from repro.models.params import Spec
+
+
+def scheme(cfg, par: int) -> str:
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if par <= 1:
+        return "none"
+    if H % par == 0 and KV % par == 0:
+        return "heads"
+    if H % par == 0:
+        return "qheads"
+    if hd % par == 0:
+        return "hd"
+    return "none"
+
+
+def attn_spec(cfg, par: int) -> dict:
+    H, KV, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    sc = scheme(cfg, par)
+    qa = "model" if sc in ("heads", "qheads") else None
+    kva = "model" if sc == "heads" else None
+    hda = "model" if sc == "hd" else None
+    spec = {
+        "wq": Spec((d, H, hd), (None, qa, hda)),
+        "wk": Spec((d, KV, hd), (None, kva, hda)),
+        "wv": Spec((d, KV, hd), (None, kva, hda)),
+        "wo": Spec((H, hd, d), (qa, hda, None)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = Spec((H, hd), (qa, hda), "zeros")
+        spec["bk"] = Spec((KV, hd), (kva, hda), "zeros")
+        spec["bv"] = Spec((KV, hd), (kva, hda), "zeros")
+    return spec
+
+
+def cache_spec(cfg, batch: int, max_seq: int, par: int, window: int = 0) -> dict:
+    """Per-layer KV cache. ``pos`` records absolute positions per slot (−1 =
+    empty), which makes windowed (rolling) and full caches uniform.
+
+    With cfg.seq_shard_cache the cache TIMELINE is sharded over the model
+    axis (flash-decode): memory /par, attention partials combined with a
+    tiny (m, l, acc) psum instead of replicating the cache (§Perf)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    sc = scheme(cfg, par)
+    kva = "model" if sc == "heads" else None
+    hda = "model" if sc == "hd" else None
+    s = min(max_seq, window) if window else max_seq
+    cdt = cfg.cache_dtype or None
+    if cfg.seq_shard_cache and par > 1 and s % par == 0:
+        return {
+            "k": Spec((batch, s, KV, hd), ("batch", "model", None, None), "zeros", None, cdt),
+            "v": Spec((batch, s, KV, hd), ("batch", "model", None, None), "zeros", None, cdt),
+            "pos": Spec((batch, s), ("batch", "model"), "neg_ones", None, "int32"),
+        }
+    return {
+        "k": Spec((batch, s, KV, hd), ("batch", None, kva, hda), "zeros", None, cdt),
+        "v": Spec((batch, s, KV, hd), ("batch", None, kva, hda), "zeros", None, cdt),
+        "pos": Spec((batch, s), ("batch", None), "neg_ones", None, "int32"),
+    }
+
+
+def _project_qkv(p, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_full(p, x, positions, cfg, *, causal=True, window=0, prefix_len=0):
+    """Training / prefill (no cache persistence). x: (B, S, d)."""
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    if prefix_len > 0:
+        out = _prefix_lm_attention(q, k, v, cfg, prefix_len, window)
+    else:
+        out = L.attention(q, k, v, cfg, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _prefix_lm_attention(q, k, v, cfg, prefix_len: int, window: int):
+    """PaliGemma-style: bidirectional over the first ``prefix_len`` positions,
+    causal elsewhere. Implemented as causal + a bidirectional prefix patch."""
+    b, s, h, hd = q.shape
+    kk = L.repeat_kv(k, h // k.shape[2])
+    vv = L.repeat_kv(v, h // v.shape[2])
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    mask |= (qpos < prefix_len) & (kpos < prefix_len)
+    if window:
+        mask &= (kpos > qpos - window) | ((qpos < prefix_len) & (kpos < prefix_len))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+
+
+def prefill_with_cache(p, x, positions, cfg, cache, *, window=0, prefix_len=0):
+    """Prefill that also fills the cache. Assumes S <= cache length."""
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    s = x.shape[1]
+    cs = cache["k"].shape[1]
+    if window and s > cs:
+        # Only the trailing window survives in a rolling cache.
+        k_w, v_w = k[:, -cs:], v[:, -cs:]
+        pos_w = positions[:, -cs:]
+    else:
+        k_w, v_w, pos_w = k, v, positions
+    slot = pos_w % cs if window else pos_w
+    bidx = jnp.arange(x.shape[0])[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slot].set(k_w.astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slot].set(v_w.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slot].set(pos_w.astype(cache["pos"].dtype)),
+    }
+    if prefix_len > 0:
+        out = _prefix_lm_attention(q, k, v, cfg, prefix_len, window)
+    else:
+        out = L.attention(q, k, v, cfg, causal=True, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def decode_step(p, x, pos, cfg, cache, *, window=0):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    cs = cache["k"].shape[1]
+    slot = pos % cs if window else pos
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(cache["pos"].dtype), slot, 1
+        ),
+    }
+    out = cached_attention(q, new_cache, pos, cfg, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def flash_decode_attention(q, cache, pos, cfg, *, window=0):
+    """Sequence-sharded decode attention (shard_map over the model axis).
+
+    Each model rank holds a 1/par slice of the KV timeline; it computes a
+    masked partial softmax over its slice and the partials are merged with
+    the online-softmax identity:
+
+        m_g = pmax(m);  l_g = psum(l * e^{m-m_g});  acc_g = psum(acc * e^{m-m_g})
+
+    Collectives per layer: all-gather of q (B*H*hd, ~MBs) at the shard_map
+    boundary + two psums of (B,H[,hd]) — vs the replicated-cache baseline's
+    per-token cache broadcast (GBs).  This is the §Perf flash-decode change.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import batch_axes, current_mesh
+
+    mesh = current_mesh()
+    bax = batch_axes(mesh)
+    h = q.shape[2]
+    kvh = cache["k"].shape[2]
+    n_rep = h // kvh
+    scale = cfg.hd ** -0.5
+
+    def local_fn(q, k, v, kpos):
+        # q: (B, 1, H, hd) replicated over model; k/v: (B, S_loc, KV, hd).
+        kk = L.repeat_kv(k.astype(q.dtype), n_rep)
+        vv = L.repeat_kv(v.astype(q.dtype), n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhk", q[:, 0:1], kk,
+                       preferred_element_type=jnp.float32) * scale
+        valid = kpos <= pos
+        if window:
+            valid &= kpos > pos - window
+        valid &= kpos >= 0
+        s = jnp.where(valid[:, None, :], s, -1e30)
+        m_loc = s.max(axis=-1)  # (B, H)
+        p = jnp.exp(s - m_loc[..., None])
+        l_loc = p.sum(axis=-1)
+        acc = jnp.einsum("bhk,bkhd->bhd", p.astype(vv.dtype), vv).astype(jnp.float32)
+        m_g = jax.lax.pmax(m_loc, "model")
+        corr = jnp.exp(m_loc - m_g)
+        l_g = jax.lax.psum(l_loc * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+        return out[:, None].astype(q.dtype)  # (B, 1, H, hd)
+
+    spec_q = P(bax, None, None, None)
+    spec_kv = P(bax, "model", None, None)
+    spec_pos = P(bax, "model")
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_q, spec_kv, spec_kv, spec_pos),
+        out_specs=P(bax, None, None, None),
+        check_vma=False,
+    )
+    return fn(q, cache["k"], cache["v"], cache["pos"])
+
+
+def _use_flash_decode(cfg, cache) -> bool:
+    from repro.distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    if not cfg.seq_shard_cache or mesh is None or "model" not in mesh.axis_names:
+        return False
+    return cache["k"].shape[1] % mesh.shape["model"] == 0
+
+
+def cached_attention(q, cache, pos, cfg, *, window=0):
+    """Attention of a single query over the cache, masked by recorded slot
+    positions (uniform for full and rolling caches)."""
+    if _use_flash_decode(cfg, cache):
+        return flash_decode_attention(q, cache, pos, cfg, window=window)
+    k, v, kpos = cache["k"], cache["v"], cache["pos"]
+    b, s, kvh, hd = k.shape
+    h = q.shape[2]
+    kk = L.repeat_kv(k.astype(q.dtype), h // kvh)
+    vv = L.repeat_kv(v.astype(q.dtype), h // kvh)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (kpos <= pos)
+    if window:
+        valid &= kpos > pos - window
+    valid &= kpos >= 0
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+
+
+def init_cache_pos(cache):
+    """Mark all slots empty (pos = -1)."""
+    return dict(cache, pos=jnp.full_like(cache["pos"], -1))

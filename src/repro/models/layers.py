@@ -1,0 +1,204 @@
+"""Common model building blocks: norms, RoPE, attention, MLPs.
+
+Everything is pure JAX over plain pytrees; sharding is expressed through the
+logical-axis helper :func:`repro.distributed.shard`, so the same code runs on
+one CPU device (smoke tests) and a 512-chip mesh (dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * weight + bias
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- attention ----
+
+
+def repeat_kv(k, n_rep: int):
+    """(B, S, kv, hd) -> (B, S, kv*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0, q_offset=0):
+    """Reference O(S^2)-memory attention. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd).
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0] (decode:
+    Sk - Sq).  Used by smoke tests and as the Pallas oracle.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    k = repeat_kv(k, h // kv)
+    v = repeat_kv(v, h // kv)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0, q_offset=0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024, unroll: bool = False):
+    """Online-softmax (FlashAttention-style) attention in pure jnp.
+
+    O(S) memory: scans over KV chunks keeping running (max, sum, acc).  This
+    is the *production reference* path — dry-run activation memory reflects a
+    fused attention, matching what the Pallas kernel does on real TPU.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    scale = hd ** -0.5
+    orig_sq = sq
+    if sq % q_chunk:
+        pad = q_chunk - sq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sq += pad
+    if sk % kv_chunk:
+        pad = kv_chunk - sk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk_p = sk + pad
+    else:
+        sk_p = sk
+    nq, nk = sq // q_chunk, sk_p // kv_chunk
+    qs = q.reshape(b, nq, q_chunk, h, hd)
+
+    def q_block(qi, qblk):
+        # qblk: (B, qc, H, hd)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            kblk = repeat_kv(kblk, n_rep)
+            vblk = repeat_kv(vblk, n_rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            msk = kpos < sk  # mask kv padding
+            if causal:
+                msk &= kpos <= qpos
+            if window > 0:
+                msk &= kpos > qpos - window
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        if unroll:  # analysis mode: exact op counts, no while-loops
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, ki)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(qblk.dtype)  # (B, qc, H, hd)
+
+    if unroll:
+        out = jnp.stack([q_block(qi, qs[:, qi]) for qi in range(nq)], axis=0)
+    else:
+        out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qs.transpose(1, 0, 2, 3, 4)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return out[:, :orig_sq]
+
+
+def attention(q, k, v, cfg, *, causal: bool = True, window: int = 0, q_offset=0):
+    """Dispatch on cfg.kernel_impl; q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    sq, sk = q.shape[1], k.shape[1]
+    if cfg.kernel_impl in ("pallas", "pallas_interpret") and sq > 1:
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+    if sq == 1:
+        # Decode: one query token — a dense row over the KV cache.
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if not cfg.fused_attention and sq * sk <= 4096 * 4096:
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if sq * sk <= 512 * 512:  # tiny smoke shapes: chunking is pure overhead
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    # Analysis lowering uses coarser tiles: 4x fewer unrolled blocks, same
+    # asymptotic bytes (the compile must stay tractable at 32k sequence).
+    blk = 2048 if cfg.analysis_unroll else 1024
+    return chunked_attention(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                             q_chunk=min(blk, sq), kv_chunk=min(blk, sk),
+                             unroll=cfg.analysis_unroll)
+
+
+# ----------------------------------------------------------------- MLP ----
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", None, "model")
+    return h @ w_down
+
+
+def geglu(x, w_gate, w_up, w_down):
+    h = jax.nn.gelu(x @ w_gate, approximate=True) * (x @ w_up)
+    h = shard(h, "batch", None, "model")
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in, approximate=False)
+    h = shard(h, "batch", None, "model")
+    return h @ w_out + b_out

@@ -1,0 +1,166 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Prefill/train uses a chunked associative scan (O(S) memory per chunk, the
+same blocking the Pallas kernel uses); decode carries (conv_state, ssm_state)
+— O(1) per token, which is what makes the long_500k cell servable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import layers as L
+from repro.models.params import Spec
+
+CHUNK = 256
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)  # ceil(d_model/16)
+    return di, dt_rank, cfg.ssm_state
+
+
+def mamba_block_spec(cfg, par: int) -> dict:
+    d = cfg.d_model
+    di, R, N = dims(cfg)
+    m = "model" if par > 1 and di % par == 0 else None
+    return {
+        "norm": Spec((d,), (None,), "ones"),
+        "in_proj": Spec((d, 2 * di), (None, m)),
+        "conv_w": Spec((di, cfg.ssm_conv), (m, None), "small_normal", 0.1),
+        "conv_b": Spec((di,), (m,), "zeros"),
+        "x_proj": Spec((di, R + 2 * N), (m, None)),
+        "dt_proj": Spec((R, di), (None, m)),
+        "dt_bias": Spec((di,), (m,), "ones"),
+        "A_log": Spec((di, N), (m, None), "small_normal", 0.5),
+        "D": Spec((di,), (m,), "ones"),
+        "out_proj": Spec((di, d), (m, None)),
+    }
+
+
+def ssm_cache_spec(cfg, batch: int, par: int) -> dict:
+    di, _, N = dims(cfg)
+    m = "model" if par > 1 and di % par == 0 else None
+    return {
+        "conv": Spec((batch, cfg.ssm_conv - 1, di), ("batch", None, m), "zeros"),
+        "ssm": Spec((batch, di, N), ("batch", m, None), "zeros"),
+    }
+
+
+def _causal_conv(x, w, b, ck: int):
+    """Depthwise causal conv along S via shift-accumulate. x: (B,S,di)."""
+    out = x * w[:, -1]
+    for i in range(1, ck):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[:, ck - 1 - i]
+    return out + b
+
+
+def ssm_forward(p, x, cfg, h0=None):
+    """x: (B, S, di) post-conv activations. Returns (y, h_last).
+
+    The (B, S, di, N) state tensor is NEVER materialized in full: dA/dBx are
+    computed and C-contracted chunk-by-chunk inside the scan, so the working
+    set is (B, CHUNK, di, N) — the same blocking the Pallas kernel uses.
+    """
+    b, s, di = x.shape
+    _, R, N = dims(cfg)
+    xdb = x @ p["x_proj"]  # (B,S,R+2N)
+    dt, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)  # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+    xf = x.astype(jnp.float32)
+    Bf, Cf = B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, N), jnp.float32)
+
+    def chunk_body(h, xs):
+        dt_c, x_c, b_c, c_c = xs  # (B,Ck,di) (B,Ck,di) (B,Ck,N) (B,Ck,N)
+        dA = jnp.exp(dt_c[..., None] * A)  # (B,Ck,di,N)
+        dBx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+
+        a_s, b_s = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = a_s * h[:, None] + b_s  # (B,Ck,di,N)
+        y_c = jnp.einsum("bsdn,bsn->bsd", hs, c_c)
+        return hs[:, -1], y_c
+
+    if s == 1:
+        dA = jnp.exp(dt[..., None] * A)
+        dBx = (dt * xf)[..., None] * Bf[:, :, None, :]
+        h_last = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_last, Cf[:, 0])[:, None]
+    elif cfg.kernel_impl in ("pallas", "pallas_interpret") and s % CHUNK == 0:
+        from repro.kernels import ops as kops
+
+        bd = di
+        while bd > 512 or di % bd:
+            bd //= 2
+        y, h_last = kops.ssm_scan(
+            dt, xf, Bf, Cf, A, h0, chunk=CHUNK, block_d=bd,
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+    elif s % CHUNK == 0:
+        nc = s // CHUNK
+
+        def to_chunks(t):
+            return t.reshape(b, nc, CHUNK, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+        xs = (to_chunks(dt), to_chunks(xf), to_chunks(Bf), to_chunks(Cf))
+        if cfg.analysis_unroll:  # exact-count lowering (no while-loops)
+            h, ys = h0, []
+            for ci in range(nc):
+                h, y_c = chunk_body(h, jax.tree_util.tree_map(lambda t: t[ci], xs))
+                ys.append(y_c)
+            h_last, ys = h, jnp.stack(ys, 0)
+        else:
+            h_last, ys = jax.lax.scan(chunk_body, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    else:  # small/odd lengths (smoke tests): token-by-token scan
+        def step(h, xs):
+            dt_t, x_t, b_t, c_t = xs  # (B,di) (B,di) (B,N) (B,N)
+            h = jnp.exp(dt_t[..., None] * A) * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+            return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+        h_last, ys = jax.lax.scan(
+            step, h0,
+            (dt.transpose(1, 0, 2), xf.transpose(1, 0, 2), Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)),
+        )
+        y = ys.transpose(1, 0, 2)
+    y = y + xf * p["D"]
+    return y.astype(x.dtype), h_last
+
+
+def mamba_block_apply(p, x, positions, cfg, *, mode, cache=None, pos=None, prefix_len=0):
+    del positions, pos, prefix_len
+    b, s, d = x.shape
+    di, _, _ = dims(cfg)
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = h @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", None, "model")
+
+    if mode == "decode":
+        # Roll conv state, one-step conv + scan.
+        conv_in = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)  # (B, ck, di)
+        new_conv = conv_in[:, 1:]
+        w = p["conv_w"]  # (di, ck)
+        xc = jnp.einsum("bkd,dk->bd", conv_in, w)[:, None] + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        y, h_last = ssm_forward(p, xc, cfg, h0=cache["ssm"].astype(jnp.float32))
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_last.astype(cache["ssm"].dtype)}
+    else:
+        xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], cfg.ssm_conv))
+        h0 = cache["ssm"].astype(jnp.float32) if cache is not None else None
+        y, h_last = ssm_forward(p, xc, cfg, h0=h0)
+        if cache is not None:
+            new_conv = x_in[:, -(cfg.ssm_conv - 1):].astype(cache["conv"].dtype)
+            new_cache = {"conv": new_conv, "ssm": h_last.astype(cache["ssm"].dtype)}
+        else:
+            new_cache = jnp.float32(0.0) if mode == "train" else None
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return x + out, new_cache

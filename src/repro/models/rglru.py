@@ -1,0 +1,310 @@
+"""RecurrentGemma (Griffin) hybrid stack: RG-LRU recurrent blocks + local
+attention in a repeating ``block_pattern`` (rec, rec, attn).
+
+The 26-layer stack is lowered as a scan over 8 full (rec, rec, attn) units
+plus an unscanned 2-layer (rec, rec) tail — keeps the HLO small while
+honouring the exact 1:2 pattern.
+
+RG-LRU recurrence (diagonal, gated):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Gates are block-diagonal with n_heads blocks (as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.params import Spec, stack_layers
+
+LRU_C = 8.0
+CHUNK = 256
+
+
+def _pattern_layout(cfg):
+    """(n_full_units, tail_types) for the repeating block pattern."""
+    pat = cfg.block_pattern
+    n_units = cfg.n_layers // len(pat)
+    tail = tuple(pat[: cfg.n_layers % len(pat)])
+    return n_units, tail
+
+
+# ------------------------------------------------------------ rec block
+
+
+def rec_block_spec(cfg, par: int) -> dict:
+    d, w, nb = cfg.d_model, cfg.lru_width, max(cfg.n_heads, 1)
+    bw = w // nb
+    m = "model" if par > 1 and w % par == 0 else None
+    return {
+        "norm": Spec((d,), (None,), "ones"),
+        "in_x": Spec((d, w), (None, m)),
+        "in_y": Spec((d, w), (None, m)),
+        "conv_w": Spec((w, 4), (m, None), "small_normal", 0.1),
+        "conv_b": Spec((w,), (m,), "zeros"),
+        "gate_a": Spec((nb, bw, bw), (None, None, m if bw % max(par, 1) == 0 else None)),
+        "gate_x": Spec((nb, bw, bw), (None, None, None)),
+        "gate_a_b": Spec((nb, bw), (None, None), "zeros"),
+        "gate_x_b": Spec((nb, bw), (None, None), "zeros"),
+        "lam": Spec((w,), (m,), "lambda_init"),
+        "out": Spec((w, d), (m, None)),
+    }
+
+
+def rec_cache_spec(cfg, batch: int, par: int) -> dict:
+    w = cfg.lru_width
+    m = "model" if par > 1 and w % par == 0 else None
+    return {
+        "conv": Spec((batch, 3, w), ("batch", None, m), "zeros"),
+        "h": Spec((batch, w), ("batch", m), "zeros"),
+    }
+
+
+def _rglru_scan(a, b, h0, impl: str = "reference", chunk: int = CHUNK):
+    """h_t = a_t h_{t-1} + b_t, diagonal; chunked associative scan."""
+    bsz, s, w = a.shape
+    CHUNK_ = min(chunk, s)
+    if s == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None], h
+    if impl in ("pallas", "pallas_interpret") and s % CHUNK_ == 0:
+        from repro.kernels import ops as kops
+
+        bw = w
+        while bw > 1024 or w % bw:
+            bw //= 2
+        return kops.rglru_scan(a, b, h0, chunk=CHUNK_, block_w=bw,
+                               interpret=impl == "pallas_interpret")
+    if s % CHUNK_ == 0:
+        nc = s // CHUNK_
+
+        def chunk(h, xs):
+            a_c, b_c = xs
+
+            def comb(l, r):
+                return (r[0] * l[0], r[0] * l[1] + r[1])
+
+            a_s, b_s = jax.lax.associative_scan(comb, (a_c, b_c), axis=1)
+            hs = a_s * h[:, None] + b_s
+            return hs[:, -1], hs
+
+        a_ch = a.reshape(bsz, nc, CHUNK_, w).transpose(1, 0, 2, 3)
+        b_ch = b.reshape(bsz, nc, CHUNK_, w).transpose(1, 0, 2, 3)
+        if impl == "unroll":  # analysis mode: exact op counts
+            h, ys = h0, []
+            for ci in range(nc):
+                h, hs_c = chunk(h, (a_ch[ci], b_ch[ci]))
+                ys.append(hs_c)
+            return jnp.stack(ys, 0).transpose(1, 0, 2, 3).reshape(bsz, s, w), h
+        h_last, hs = jax.lax.scan(chunk, h0, (a_ch, b_ch))
+        return hs.transpose(1, 0, 2, 3).reshape(bsz, s, w), h_last
+
+    def step(h, xs):
+        a_t, b_t = xs
+        h = a_t * h + b_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), h_last
+
+
+def rec_block_apply(p, x, cfg, cache=None):
+    """Griffin recurrent block. Returns (x, new_cache)."""
+    bsz, s, d = x.shape
+    nb = max(cfg.n_heads, 1)
+    w = cfg.lru_width
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    y_branch = jax.nn.gelu(h @ p["in_y"], approximate=True)  # (B,S,w)
+    x_branch = h @ p["in_x"]
+
+    # Causal depthwise conv (width 4) with optional carried state.
+    if cache is not None:
+        conv_in = jnp.concatenate([cache["conv"].astype(x_branch.dtype), x_branch], axis=1)
+    else:
+        conv_in = jnp.pad(x_branch, ((0, 0), (3, 0), (0, 0)))
+    ck = p["conv_w"].shape[1]
+    xc = sum(conv_in[:, i : i + s] * p["conv_w"][:, i] for i in range(ck)) + p["conv_b"]
+
+    # Block-diagonal gates.
+    xg = xc.reshape(bsz, s, nb, w // nb)
+    r = jax.nn.sigmoid(jnp.einsum("bsnw,nwv->bsnv", xg, p["gate_a"]) + p["gate_a_b"])
+    i = jax.nn.sigmoid(jnp.einsum("bsnw,nwv->bsnv", xg, p["gate_x"]) + p["gate_x_b"])
+    r = r.reshape(bsz, s, w).astype(jnp.float32)
+    i = i.reshape(bsz, s, w).astype(jnp.float32)
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * xc.astype(jnp.float32)
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else jnp.zeros((bsz, w), jnp.float32)
+    impl = "unroll" if cfg.analysis_unroll else cfg.kernel_impl
+    # Analysis lowering: coarser chunks (4096 vs 256) keep the unrolled HLO
+    # compilable at 32k+ sequence lengths; same math, same asymptotic bytes.
+    chunk = 4096 if impl == "unroll" else CHUNK
+    hs, h_last = _rglru_scan(a, gated, h0, impl=impl, chunk=chunk)
+    hs = hs.astype(x.dtype)
+
+    out = (hs * y_branch) @ p["out"]
+    new_cache = None
+    if cache is not None:
+        tail = conv_in[:, -(ck - 1):]
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "h": h_last.astype(cache["h"].dtype)}
+    return x + out, new_cache
+
+
+# ----------------------------------------------------------- mlp + attn
+
+
+def mlp_spec(cfg, par: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": Spec((d,), (None,), "ones"),
+        "w_gate": Spec((d, f), (None, "model")),
+        "w_up": Spec((d, f), (None, "model")),
+        "w_down": Spec((f, d), ("model", None)),
+    }
+
+
+def layer_spec(cfg, par: int, kind: str) -> dict:
+    if kind == "rec":
+        return {"mix": rec_block_spec(cfg, par), "mlp": mlp_spec(cfg, par)}
+    return {
+        "mix": {"norm": Spec((cfg.d_model,), (None,), "ones"), **A.attn_spec(cfg, par)},
+        "mlp": mlp_spec(cfg, par),
+    }
+
+
+def layer_cache_spec(cfg, batch: int, max_seq: int, par: int, kind: str) -> dict:
+    if kind == "rec":
+        return rec_cache_spec(cfg, batch, par)
+    return A.cache_spec(cfg, batch, max_seq, par, window=cfg.window)
+
+
+def layer_apply(p, x, positions, cfg, *, kind, mode, cache=None, pos=None):
+    if kind == "rec":
+        x, new_cache = rec_block_apply(p["mix"], x, cfg, cache=cache)
+    else:
+        ap = {k: v for k, v in p["mix"].items() if k != "norm"}
+        h = L.rms_norm(x, p["mix"]["norm"], cfg.norm_eps)
+        if mode == "train":
+            a = A.attend_full(ap, h, positions, cfg, window=cfg.window)
+            new_cache = None
+        elif mode == "prefill":
+            a, new_cache = A.prefill_with_cache(ap, h, positions, cfg, cache, window=cfg.window)
+        else:
+            a, new_cache = A.decode_step(ap, h, pos, cfg, cache, window=cfg.window)
+        x = x + a
+    h = L.rms_norm(x, p["mlp"]["norm"], cfg.norm_eps)
+    x = x + L.geglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return shard(x, "batch", None, None), new_cache
+
+
+# -------------------------------------------------------------- stack
+
+
+def param_spec(cfg, par: int = 1) -> dict:
+    from repro.models import transformer as T
+
+    n_units, tail = _pattern_layout(cfg)
+    spec = T.embed_spec(cfg, par)
+    unit = {f"l{i}_{k}": layer_spec(cfg, par, k) for i, k in enumerate(cfg.block_pattern)}
+    spec["units"] = stack_layers(n_units, unit)
+    spec["tail"] = {f"t{i}_{k}": layer_spec(cfg, par, k) for i, k in enumerate(tail)}
+    return spec
+
+
+def cache_spec(cfg, batch: int, max_seq: int, par: int = 1) -> dict:
+    n_units, tail = _pattern_layout(cfg)
+    unit = {
+        f"l{i}_{k}": layer_cache_spec(cfg, batch, max_seq, par, k)
+        for i, k in enumerate(cfg.block_pattern)
+    }
+    return {
+        "units": stack_layers(n_units, unit),
+        "tail": {f"t{i}_{k}": layer_cache_spec(cfg, batch, max_seq, par, k) for i, k in enumerate(tail)},
+    }
+
+
+def run_stack(params, x, positions, cfg, *, mode, cache=None, pos=None):
+    def unit_body(h, xs):
+        up, uc = xs
+        new_uc = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"l{i}_{kind}"
+            lc = uc[key] if uc is not None else None
+            h, nc = layer_apply(up[key], h, positions, cfg, kind=kind, mode=mode, cache=lc, pos=pos)
+            new_uc[key] = nc
+        return h, new_uc
+
+    body = unit_body
+    if mode == "train" and cfg.remat == "full":
+        body = jax.checkpoint(unit_body)
+    elif mode == "train" and cfg.remat == "dots":
+        body = jax.checkpoint(unit_body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    ucache = cache["units"] if cache is not None else None
+    n_units, _ = _pattern_layout(cfg)
+    if not cfg.scan_layers:  # unrolled (smoke / analysis lowering)
+        new_list = []
+        for ui in range(n_units):
+            up = jax.tree_util.tree_map(lambda t: t[ui], params["units"])
+            uc = jax.tree_util.tree_map(lambda t: t[ui], ucache) if ucache is not None else None
+            x, nu = body(x, (up, uc))
+            new_list.append(nu)
+        new_units = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_list)
+            if ucache is not None
+            else None
+        )
+    elif ucache is None:
+        x, _ = jax.lax.scan(lambda h, up: (body(h, (up, None))[0], None), x, params["units"])
+        new_units = None
+    else:
+        x, new_units = jax.lax.scan(body, x, (params["units"], ucache))
+
+    _, tail = _pattern_layout(cfg)
+    new_tail = {}
+    for i, kind in enumerate(tail):
+        key = f"t{i}_{kind}"
+        lc = cache["tail"][key] if cache is not None else None
+        x, nc = layer_apply(params["tail"][key], x, positions, cfg, kind=kind, mode=mode, cache=lc, pos=pos)
+        new_tail[key] = nc
+    if cache is None:
+        return x, None
+    return x, {"units": new_units, "tail": new_tail}
+
+
+def forward_train(params, batch, cfg):
+    from repro.models import transformer as T
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = T.embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = run_stack(params, x, positions, cfg, mode="train")
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    return T.lm_loss(params, x, labels, mask, cfg)
+
+
+def prefill(params, batch, cfg, cache):
+    from repro.models import transformer as T
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = T.embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = run_stack(params, x, positions, cfg, mode="prefill", cache=cache)
+    return T.logits_fn(params, x[:, -1:], cfg), cache
+
+
+def decode(params, token, pos, cfg, cache):
+    from repro.models import transformer as T
+
+    x = T.embed_tokens(params, token, cfg)
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x, cache = run_stack(params, x, positions, cfg, mode="decode", cache=cache, pos=pos)
+    return T.logits_fn(params, x, cfg), cache

@@ -1,0 +1,239 @@
+"""Generic decoder-LM driver: scan-over-layers stack + embed/head + losses.
+
+Handles the homogeneous-stack families (dense, moe, vlm, ssm) through a
+per-family block interface; hybrid (recurrentgemma) and audio (whisper)
+implement their own stacks in ``rglru.py`` / ``whisper.py`` but reuse the
+embed/head/loss helpers here.
+
+Block interface (see FAMILY of repro.models):
+    block_spec(cfg, par) -> Spec tree for ONE layer
+    block_apply(p, x, positions, cfg, *, mode, cache, pos, prefix_len)
+        -> (x, new_cache)   # cache is None in "train" mode
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.params import Spec, stack_layers
+
+
+# ------------------------------------------------------------- dense block
+
+
+def dense_block_spec(cfg, par: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "attn": A.attn_spec(cfg, par),
+        "mlp": {
+            "w_gate": Spec((d, f), (None, "model")),
+            "w_up": Spec((d, f), (None, "model")),
+            "w_down": Spec((f, d), ("model", None)),
+        },
+        "norm1": Spec((d,), (None,), "ones"),
+        "norm2": Spec((d,), (None,), "ones"),
+    }
+
+
+def dense_block_apply(p, x, positions, cfg, *, mode, cache=None, pos=None, prefix_len=0):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mode == "train":
+        a = A.attend_full(p["attn"], h, positions, cfg, window=cfg.window, prefix_len=prefix_len)
+        new_cache = jnp.float32(0.0)  # train mode: cache slot carries aux loss
+    elif mode == "prefill":
+        a, new_cache = A.prefill_with_cache(
+            p["attn"], h, positions, cfg, cache, window=cfg.window, prefix_len=prefix_len
+        )
+    else:  # decode
+        a, new_cache = A.decode_step(p["attn"], h, pos, cfg, cache, window=cfg.window)
+    x = x + a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    x = shard(x, "batch", None, None)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------- stack
+
+
+def _family():
+    """Family dispatch table (deferred imports to avoid cycles)."""
+    from repro.models import mamba, moe
+
+    return {
+        "dense": (dense_block_spec, dense_block_apply),
+        "vlm": (dense_block_spec, dense_block_apply),
+        "moe": (moe.moe_block_spec, moe.moe_block_apply),
+        "ssm": (mamba.mamba_block_spec, mamba.mamba_block_apply),
+    }
+
+
+def embed_spec(cfg, par: int) -> dict:
+    spec = {
+        "embed": Spec((cfg.vocab, cfg.d_model), ("model", None), "small_normal", 0.02),
+        "final_norm": Spec((cfg.d_model,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = Spec((cfg.d_model, cfg.vocab), (None, "model"))
+    return spec
+
+
+def param_spec(cfg, par: int = 1) -> dict:
+    bspec, _ = _family()[cfg.family]
+    spec = embed_spec(cfg, par)
+    spec["layers"] = stack_layers(cfg.n_layers, bspec(cfg, par))
+    return spec
+
+
+def cache_spec(cfg, batch: int, max_seq: int, par: int = 1) -> Any:
+    """Stacked (n_layers-leading) cache tree."""
+    if cfg.family == "ssm":
+        from repro.models import mamba
+
+        per_layer = mamba.ssm_cache_spec(cfg, batch, par)
+    else:
+        per_layer = A.cache_spec(cfg, batch, max_seq, par, window=cfg.window)
+    return stack_layers(cfg.n_layers, per_layer)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def run_stack(params, x, positions, cfg, *, mode, cache=None, pos=None, prefix_len=0):
+    """Run the layer stack. Returns (x, new_cache_stacked_or_None)."""
+    _, bapply = _family()[cfg.family]
+
+    def one_layer(h, xs):
+        lp, lcache = xs
+        h, new_c = bapply(
+            lp, h, positions, cfg, mode=mode, cache=lcache, pos=pos, prefix_len=prefix_len
+        )
+        return h, new_c
+
+    if cfg.scan_layers:
+        body = _maybe_remat(one_layer, cfg) if mode == "train" else one_layer
+        if cache is None:
+            # Train mode: the per-layer "cache" slot carries the aux loss
+            # (MoE router load-balance); sum over layers.
+            x, auxes = jax.lax.scan(lambda h, lp: body(h, (lp, None)), x, params["layers"])
+            aux = jnp.sum(auxes) if auxes is not None else jnp.float32(0.0)
+            return x, aux
+        x, caches = jax.lax.scan(body, x, (params["layers"], cache))
+        return x, caches
+    # Unrolled path (small smoke configs).
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        lc = jax.tree_util.tree_map(lambda a: a[i], cache) if cache is not None else None
+        fn = _maybe_remat(lambda h, xs: one_layer(h, xs), cfg) if mode == "train" else one_layer
+        x, nc = fn(x, (lp, lc))
+        new_caches.append(nc)
+    if cache is not None:
+        caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        caches = sum(new_caches) if mode == "train" else None
+    return x, caches
+
+
+# ------------------------------------------------------------ embed/head
+
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)  # gemma-style scaling
+    return shard(x, "batch", None, None)
+
+
+def logits_fn(params, x, cfg):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return shard(logits, "batch", None, "model")
+
+
+def lm_loss(params, x, labels, mask, cfg):
+    """Next-token CE. ``x``: (B,S,d) final hidden; labels/mask: (B,S)."""
+    if cfg.logits_chunk and x.shape[1] % cfg.logits_chunk == 0 and x.shape[1] > cfg.logits_chunk:
+        n = x.shape[1] // cfg.logits_chunk
+        xs = x.reshape(x.shape[0], n, cfg.logits_chunk, x.shape[2])
+        ls = labels.reshape(labels.shape[0], n, cfg.logits_chunk)
+        ms = mask.reshape(mask.shape[0], n, cfg.logits_chunk)
+
+        def chunk(carry, args):
+            xc, lc, mc = args
+            lg = logits_fn(params, xc, cfg)
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            tok = jnp.take_along_axis(lp, lc[..., None], axis=-1)[..., 0]
+            return (carry[0] - jnp.sum(tok * mc), carry[1] + jnp.sum(mc)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk, (jnp.float32(0), jnp.float32(0)),
+            (xs.transpose(1, 0, 2, 3), ls.transpose(1, 0, 2), ms.transpose(1, 0, 2)),
+        )
+        return tot / jnp.maximum(cnt, 1.0)
+    logits = logits_fn(params, x, cfg)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    tok = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------------------------------------- public API
+
+
+def forward_train(params, batch, cfg):
+    """Returns scalar loss. batch: {tokens:(B,S)} (+patches for vlm)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        prefix_len = cfg.n_patches
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = run_stack(params, x, positions, cfg, mode="train", prefix_len=prefix_len)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_patches:]
+    # Predict token t+1 at position t.
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    loss = lm_loss(params, x, labels, mask, cfg)
+    if cfg.n_experts:  # MoE router load-balance penalty (Switch/GShard)
+        loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+    return loss
+
+
+def prefill(params, batch, cfg, cache):
+    """Fill cache from a full prompt; returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        prefix_len = cfg.n_patches
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = run_stack(params, x, positions, cfg, mode="prefill", cache=cache, prefix_len=prefix_len)
+    logits = logits_fn(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode(params, token, pos, cfg, cache):
+    """One decode step. token: (B,1) int32; pos: scalar int32."""
+    x = embed_tokens(params, token, cfg)
+    x, cache = run_stack(params, x, None, cfg, mode="decode", cache=cache, pos=pos)
+    logits = logits_fn(params, x, cfg)
+    return logits, cache

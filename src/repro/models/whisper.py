@@ -1,0 +1,249 @@
+"""Whisper-tiny backbone: transformer encoder-decoder with cross-attention.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed (B, enc_frames, d_model) frame embeddings.  Faithful details
+kept: LayerNorm (with bias), biased q/v/out projections (k unbiased), GELU
+MLP, sinusoidal encoder positions, learned decoder positions, tied output
+head, pre-LN blocks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import layers as L
+from repro.models.params import Spec, stack_layers
+
+
+def _attn_spec(cfg, par: int) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    hda = "model" if par > 1 and hd % par == 0 else None
+    return {
+        "wq": Spec((d, H, hd), (None, None, hda)),
+        "bq": Spec((H, hd), (None, hda), "zeros"),
+        "wk": Spec((d, H, hd), (None, None, hda)),
+        "wv": Spec((d, H, hd), (None, None, hda)),
+        "bv": Spec((H, hd), (None, hda), "zeros"),
+        "wo": Spec((H, hd, d), (None, hda, None)),
+        "bo": Spec((d,), (None,), "zeros"),
+    }
+
+
+def _ln_spec(cfg) -> dict:
+    return {"w": Spec((cfg.d_model,), (None,), "ones"), "b": Spec((cfg.d_model,), (None,), "zeros")}
+
+
+def _mlp_spec(cfg, par: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": Spec((d, f), (None, "model")),
+        "b_in": Spec((f,), ("model",), "zeros"),
+        "w_out": Spec((f, d), ("model", None)),
+        "b_out": Spec((d,), (None,), "zeros"),
+    }
+
+
+def param_spec(cfg, par: int = 1) -> dict:
+    enc_layer = {
+        "ln1": _ln_spec(cfg),
+        "attn": _attn_spec(cfg, par),
+        "ln2": _ln_spec(cfg),
+        "mlp": _mlp_spec(cfg, par),
+    }
+    dec_layer = {
+        "ln1": _ln_spec(cfg),
+        "self_attn": _attn_spec(cfg, par),
+        "ln2": _ln_spec(cfg),
+        "cross_attn": _attn_spec(cfg, par),
+        "ln3": _ln_spec(cfg),
+        "mlp": _mlp_spec(cfg, par),
+    }
+    return {
+        "enc_layers": stack_layers(cfg.enc_layers, enc_layer),
+        "enc_ln_post": _ln_spec(cfg),
+        "tok_embed": Spec((cfg.vocab, cfg.d_model), ("model", None), "small_normal", 0.02),
+        "pos_embed": Spec((cfg.max_decode_ctx, cfg.d_model), (None, None), "small_normal", 0.01),
+        "dec_layers": stack_layers(cfg.n_layers, dec_layer),
+        "dec_ln_final": _ln_spec(cfg),
+    }
+
+
+def cache_spec(cfg, batch: int, max_seq: int, par: int = 1) -> dict:
+    H, hd = cfg.n_heads, cfg.hd
+    hda = "model" if par > 1 and hd % par == 0 else None
+    s = min(max_seq, cfg.max_decode_ctx)
+    per_layer = {
+        "k": Spec((batch, s, H, hd), ("batch", None, None, hda), "zeros"),
+        "v": Spec((batch, s, H, hd), ("batch", None, None, hda), "zeros"),
+        "pos": Spec((batch, s), ("batch", None), "neg_ones", None, "int32"),
+        "xk": Spec((batch, cfg.enc_frames, H, hd), ("batch", None, None, hda), "zeros"),
+        "xv": Spec((batch, cfg.enc_frames, H, hd), ("batch", None, None, hda), "zeros"),
+    }
+    return stack_layers(cfg.n_layers, per_layer)
+
+
+def _proj_q(p, x):
+    return jnp.einsum("bsd,dhk->bshk", x, p["wq"]) + p["bq"]
+
+
+def _proj_kv(p, x):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]) + p["bv"]
+    return k, v
+
+
+def _attn_out(p, out):
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]) + p["bo"]
+
+
+def _attn(p, x, kv_src, cfg, *, causal):
+    q = _proj_q(p, x)
+    k, v = _proj_kv(p, kv_src)
+    out = L.attention(q, k, v, cfg, causal=causal)
+    return _attn_out(p, out)
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = np.log(10000) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(np.concatenate([np.sin(t), np.cos(t)], axis=1), jnp.float32)
+
+
+def encode(params, frames, cfg):
+    """frames: (B, F, d) stubbed conv-frontend output."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoids(cfg.enc_frames, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", None, None)
+
+    def layer(h, lp):
+        a = _attn(lp["attn"], L.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps),
+                  L.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps), cfg, causal=False)
+        h = h + a
+        m = L.gelu_mlp(
+            L.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps),
+            lp["mlp"]["w_in"], lp["mlp"]["b_in"], lp["mlp"]["w_out"], lp["mlp"]["b_out"],
+        )
+        return h + m, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            x, _ = layer(x, jax.tree_util.tree_map(lambda t: t[i], params["enc_layers"]))
+    return L.layer_norm(x, params["enc_ln_post"]["w"], params["enc_ln_post"]["b"], cfg.norm_eps)
+
+
+def _dec_layer(lp, h, enc_out, cfg, *, mode, cache=None, pos=None):
+    """One decoder layer; cache holds self k/v/pos + cross xk/xv."""
+    new_cache = None
+    x1 = L.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+    if mode == "train":
+        q = _proj_q(lp["self_attn"], x1)
+        k, v = _proj_kv(lp["self_attn"], x1)
+        a = _attn_out(lp["self_attn"], L.attention(q, k, v, cfg, causal=True))
+    else:
+        q = _proj_q(lp["self_attn"], x1)
+        k, v = _proj_kv(lp["self_attn"], x1)
+        b = h.shape[0]
+        if mode == "prefill":
+            s = h.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+            bidx = jnp.arange(b)[:, None]
+            new_k = cache["k"].at[bidx, positions].set(k.astype(cache["k"].dtype))
+            new_v = cache["v"].at[bidx, positions].set(v.astype(cache["v"].dtype))
+            new_pos = cache["pos"].at[bidx, positions].set(positions)
+            a = _attn_out(lp["self_attn"], L.attention(q, k, v, cfg, causal=True))
+        else:  # decode
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+            pcol = jnp.full((b, 1), pos, cache["pos"].dtype)
+            new_pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pcol, pos, 1)
+            from repro.models.attention import cached_attention
+
+            tmp_cache = {"k": new_k, "v": new_v, "pos": new_pos}
+            a = _attn_out(lp["self_attn"], cached_attention(q, tmp_cache, pos, cfg))
+    h = h + a
+
+    x2 = L.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+    if mode == "decode":
+        xk = cache["xk"].astype(x2.dtype)
+        xv = cache["xv"].astype(x2.dtype)
+        q = _proj_q(lp["cross_attn"], x2)
+        ca = _attn_out(lp["cross_attn"], L.attention(q, xk, xv, cfg, causal=False))
+    else:
+        q = _proj_q(lp["cross_attn"], x2)
+        xk, xv = _proj_kv(lp["cross_attn"], enc_out)
+        ca = _attn_out(lp["cross_attn"], L.attention(q, xk, xv, cfg, causal=False))
+    h = h + ca
+
+    m = L.gelu_mlp(
+        L.layer_norm(h, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps),
+        lp["mlp"]["w_in"], lp["mlp"]["b_in"], lp["mlp"]["w_out"], lp["mlp"]["b_out"],
+    )
+    h = h + m
+    if mode == "prefill":
+        new_cache = {"k": new_k, "v": new_v, "pos": new_pos,
+                     "xk": xk.astype(cache["xk"].dtype), "xv": xv.astype(cache["xv"].dtype)}
+    elif mode == "decode":
+        new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "xk": cache["xk"], "xv": cache["xv"]}
+    return h, new_cache
+
+
+def _decoder(params, tokens, enc_out, cfg, *, mode, cache=None, pos=None):
+    b, s = tokens.shape
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if mode == "decode":
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)
+    else:
+        pe = params["pos_embed"][:s]
+    x = shard(x + pe.astype(x.dtype), "batch", None, None)
+
+    def layer(h, xs):
+        lp, lc = xs
+        return _dec_layer(lp, h, enc_out, cfg, mode=mode, cache=lc, pos=pos)
+
+    if not cfg.scan_layers:  # unrolled (smoke / analysis lowering)
+        new_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda t: t[i], params["dec_layers"])
+            lc = jax.tree_util.tree_map(lambda t: t[i], cache) if cache is not None else None
+            x, nc = layer(x, (lp, lc))
+            new_list.append(nc)
+        new_cache = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_list)
+            if cache is not None
+            else None
+        )
+    elif cache is None:
+        x, _ = jax.lax.scan(lambda h, lp: layer(h, (lp, None)), x, params["dec_layers"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(layer, x, (params["dec_layers"], cache))
+    x = L.layer_norm(x, params["dec_ln_final"]["w"], params["dec_ln_final"]["b"], cfg.norm_eps)
+    logits = (x @ params["tok_embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return shard(logits, "batch", None, "model"), new_cache
+
+
+def forward_train(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    logits, _ = _decoder(params, batch["tokens"], enc_out, cfg, mode="train")
+    labels = jnp.roll(batch["tokens"], -1, axis=1)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    tok = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    return -jnp.sum(tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def prefill(params, batch, cfg, cache):
+    enc_out = encode(params, batch["frames"], cfg)
+    logits, cache = _decoder(params, batch["tokens"], enc_out, cfg, mode="prefill", cache=cache)
+    return logits[:, -1:], cache
+
+
+def decode(params, token, pos, cfg, cache):
+    logits, cache = _decoder(params, token, None, cfg, mode="decode", cache=cache, pos=pos)
+    return logits, cache

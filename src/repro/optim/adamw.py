@@ -1,0 +1,82 @@
+"""AdamW, built in-repo (no optax dependency).
+
+Optimizer state is described by the same Spec machinery as params, so the
+dry-run gets correct shapes/shardings with zero allocation.  ``zero1=True``
+additionally shards m/v over the data axis (ZeRO-1): for each leaf the
+largest replicated dim divisible by the data-axis size is given to "data".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec, tree_map_specs
+
+B1, B2, EPS = 0.9, 0.95, 1e-8
+
+
+def _zero1_spec(s: Spec, data_par: int) -> Spec:
+    entries = list(s.pspec) if s.pspec else [None] * len(s.shape)
+    while len(entries) < len(s.shape):
+        entries.append(None)
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(s.shape, entries)):
+        if e is None and data_par > 1 and dim % data_par == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = "batch"  # resolves to ("pod","data") axes
+    return Spec(s.shape, tuple(entries), "zeros", None, s.dtype)
+
+
+def adamw_init_spec(param_spec_tree, *, zero1: bool = False, data_par: int = 1,
+                    state_dtype: str = "float32") -> dict:
+    """Spec tree for (m, v). Step counter is added at materialize time."""
+
+    def mk(s: Spec) -> Spec:
+        out = Spec(s.shape, s.pspec, "zeros", None, state_dtype)
+        if zero1:
+            out = _zero1_spec(out, data_par)
+        return out
+
+    return {"m": tree_map_specs(mk, param_spec_tree), "v": tree_map_specs(mk, param_spec_tree)}
+
+
+def lr_schedule(step, *, peak: float = 3e-4, warmup: int = 100, decay_steps: int = 10_000):
+    warm = peak * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(decay_steps - warmup, 1), 0.0, 1.0)
+    cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+
+def adamw_update(params, grads, opt_state, step, *, lr, weight_decay: float = 0.01,
+                 grad_clip: float = 1.0):
+    """One AdamW step. Returns (new_params, new_opt_state)."""
+    # Global-norm clip.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - B1 ** t
+    bc2 = 1.0 - B2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = B1 * m.astype(jnp.float32) + (1 - B1) * g
+        v_new = B2 * v.astype(jnp.float32) + (1 - B2) * jnp.square(g)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + EPS)
+        p_new = p.astype(jnp.float32) - lr * (update + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}

@@ -1,0 +1,35 @@
+"""Serving steps: prefill (prompt → cache) and decode (one token, KV cache).
+
+``decode_*`` / ``long_*`` dry-run cells lower make_decode_step — one new
+token against a seq_len-deep cache — per the assignment."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _cast_float(tree, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def make_prefill_step(cfg, api):
+    def prefill_step(params, batch, cache):
+        params = _cast_float(params, cfg.compute_dtype)
+        logits, cache = api.prefill(params, batch, cfg, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, api):
+    def decode_step(params, cache, token, pos):
+        params = _cast_float(params, cfg.compute_dtype)
+        logits, cache = api.decode(params, token, pos, cfg, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return decode_step

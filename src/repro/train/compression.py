@@ -1,0 +1,57 @@
+"""Gradient compression for cross-pod reduction (int8 + error feedback).
+
+At 1000+ nodes the cross-pod gradient all-reduce rides the slow DCN links;
+int8 quantization cuts those bytes 4x vs fp32.  Error feedback (Seide et
+al.) accumulates the quantization residual into the next step so the
+compressed SGD trajectory tracks the exact one.
+
+Used by the heterogeneous trainer's host-side combine; for the pure-SPMD
+path it can wrap grads before the optimizer (the GSPMD all-reduce then
+moves int8).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads):
+    return jax.tree_util.tree_map(quantize, grads)
+
+
+def decompress_tree(qtree):
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize(*qs), qtree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+class ErrorFeedback:
+    """Residual accumulator: compress(g + e); e' = (g + e) - decompress(...)."""
+
+    def __init__(self) -> None:
+        self._residual: Optional[Any] = None
+
+    def compress(self, grads):
+        if self._residual is not None:
+            grads = jax.tree_util.tree_map(jnp.add, grads, self._residual)
+        qtree = compress_tree(grads)
+        deq = decompress_tree(qtree)
+        self._residual = jax.tree_util.tree_map(jnp.subtract, grads, deq)
+        return qtree
+
+    def reset(self) -> None:
+        self._residual = None

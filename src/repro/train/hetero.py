@@ -1,0 +1,124 @@
+"""Heterogeneous data-parallel trainer — EngineCL applied to training.
+
+Device groups (pods / mixed TPU generations / degraded hosts) have unequal
+throughput.  Each step:
+
+1. the scheduler (Static over EMA-rated powers — the paper's HGuided
+   "computing power" made adaptive, at step granularity; see DESIGN.md §2)
+   partitions the global batch into per-group microbatch shares;
+2. every group computes grads on its share concurrently (one dispatcher
+   thread per group — the paper's Device threads);
+3. grads are combined host-side, weighted by actual token counts, optionally
+   int8-compressed (cross-pod DCN link), and AdamW is applied once;
+4. updated params are broadcast; measured step times re-rate group powers —
+   a straggling pod automatically receives a smaller share next step.
+
+This is the *between-step* scheduling regime: XLA SPMD programs cannot
+resize shards mid-step (DESIGN.md §7.1), so packages = per-step shares.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceGroup
+from repro.core.rating import ThroughputRater
+from repro.optim import adamw_update, lr_schedule
+from repro.train.compression import ErrorFeedback, compress_tree, decompress_tree
+
+
+class HeteroTrainer:
+    def __init__(self, cfg, api, groups: List[DeviceGroup], *, quantum: int = 1,
+                 compress: bool = False, lr_kwargs: Optional[dict] = None) -> None:
+        self.cfg = cfg
+        self.api = api
+        self.groups = groups
+        self.quantum = quantum  # shares are multiples of this many sequences
+        self.compress = compress
+        self.lr_kwargs = lr_kwargs or {}
+        self.rater = ThroughputRater(alpha=0.5)
+        self.rater.reset({id(g): g.power for g in groups})
+        self._ef = {id(g): ErrorFeedback() for g in groups}
+
+        def loss_of(params, batch):
+            return api.forward_train(params, batch, cfg)
+
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_of))
+
+    # ---------------------------------------------------------------- shares
+    def partition(self, batch_size: int) -> List[int]:
+        powers = np.array([self.rater.power(id(g)) for g in self.groups])
+        raw = batch_size * powers / powers.sum()
+        q = self.quantum
+        shares = np.maximum(q, (np.round(raw / q) * q).astype(int))
+        # Fix rounding drift onto the most powerful group.
+        drift = batch_size - int(shares.sum())
+        shares[int(np.argmax(powers))] += drift
+        if shares.min() < 0:
+            raise ValueError(f"unsatisfiable shares {shares} for batch {batch_size}")
+        return shares.tolist()
+
+    # ------------------------------------------------------------------ step
+    def step(self, state: dict, batch: dict) -> tuple[dict, dict]:
+        bsz = batch["tokens"].shape[0]
+        shares = self.partition(bsz)
+        offsets = np.concatenate([[0], np.cumsum(shares)]).astype(int)
+        results: dict[int, tuple] = {}
+        errors: list[str] = []
+
+        def worker(i: int, group: DeviceGroup) -> None:
+            try:
+                lo, hi = offsets[i], offsets[i + 1]
+                mb = {k: jax.device_put(np.asarray(v[lo:hi]), group.device) for k, v in batch.items()}
+                params_g = jax.device_put(state["params"], group.device)
+                t0 = time.perf_counter()
+                loss, grads = self._grad_fn(params_g, mb)
+                jax.block_until_ready(grads)
+                dt = time.perf_counter() - t0
+                group.simulate_service_time(hi - lo, dt)
+                dt = max(time.perf_counter() - t0, 1e-9)
+                if self.compress:
+                    grads = decompress_tree(self._ef[id(group)].compress(grads))
+                results[i] = (float(loss), grads, hi - lo, dt)
+            except Exception as e:  # noqa: BLE001
+                errors.append(f"{group.name}: {e!r}")
+
+        threads = [threading.Thread(target=worker, args=(i, g)) for i, g in enumerate(self.groups)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise RuntimeError("; ".join(errors))
+
+        # Weighted combine by actual sequence counts (host-side cross-group
+        # reduction — the DCN/elastic path; in-pod reduction stays in XLA).
+        total = sum(r[2] for r in results.values())
+        combined = None
+        loss = 0.0
+        for i, (l, g, n, dt) in sorted(results.items()):
+            w = n / total
+            loss += l * w
+            scaled = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32) * w, g)
+            combined = scaled if combined is None else jax.tree_util.tree_map(
+                jnp.add, combined, scaled
+            )
+            self.rater.update(id(self.groups[i]), n / dt)
+
+        lr = lr_schedule(state["step"], **self.lr_kwargs)
+        new_params, new_opt = adamw_update(
+            state["params"], combined, state["opt"], state["step"], lr=lr
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {
+            "loss": loss,
+            "shares": shares,
+            "powers": [self.rater.power(id(g)) for g in self.groups],
+        }
+        return new_state, metrics

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run is the only 512-device consumer).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,120 @@
+"""Engine integration: co-execution correctness, error surfacing, metrics."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    DeviceGroup,
+    DeviceMask,
+    Dynamic,
+    EngineCL,
+    HGuided,
+    Program,
+    Static,
+    discover,
+)
+
+
+def saxpy(offset, x):
+    return 2.0 * x + 1.0
+
+
+def make_engine(sched, n=4096, lws=64, n_groups=3):
+    x = np.arange(n, dtype=np.float32)
+    y = np.zeros(n, np.float32)
+    groups = [DeviceGroup(f"g{i}", power=float(2 ** i)) for i in range(n_groups)]
+    prog = Program().in_(x).out(y).kernel(saxpy, "saxpy").work_items(n, lws)
+    eng = EngineCL().use(*groups).scheduler(sched).program(prog)
+    return eng, x, y
+
+
+@pytest.mark.parametrize("sched", [Static(), Dynamic(10), HGuided(), HGuided(adaptive=True)])
+def test_coexec_matches_native(sched):
+    eng, x, y = make_engine(sched)
+    eng.run()
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(y, 2.0 * x + 1.0)
+
+
+def test_full_coverage_no_overlap_records():
+    eng, x, y = make_engine(Dynamic(17), n=1088, lws=16)
+    eng.run()
+    cover = np.zeros(1088, int)
+    for r in eng.introspector.records:
+        cover[r.offset_wi : r.offset_wi + r.size_wi] += 1
+    assert (cover == 1).all()
+
+
+def test_engine_surfaces_kernel_errors():
+    def bad(offset, x):
+        raise RuntimeError("boom")
+
+    x = np.arange(64, dtype=np.float32)
+    y = np.zeros(64, np.float32)
+    eng = EngineCL().use(DeviceGroup("g"))
+    eng.program(Program().in_(x).out(y).kernel(bad).work_items(64, 8))
+    eng.run()
+    assert eng.has_errors()
+    assert "boom" in eng.get_errors()[0]
+
+
+def test_engine_validation_errors_no_crash():
+    eng = EngineCL().use(DeviceGroup("g"))
+    eng.run()  # no program
+    assert eng.has_errors()
+
+
+def test_discover_cpu():
+    groups = discover(DeviceMask.CPU)
+    assert len(groups) >= 1
+    assert groups[0].device.platform == "cpu"
+
+
+def test_multi_output_program():
+    def k(offset, a, b):
+        return a + b, a - b
+
+    a = np.arange(256, dtype=np.float32)
+    b = np.ones(256, np.float32)
+    s1, s2 = np.zeros_like(a), np.zeros_like(a)
+    eng = EngineCL().use(DeviceGroup("g0"), DeviceGroup("g1"))
+    eng.program(Program().in_(a).in_(b).out(s1).out(s2).kernel(k).work_items(256, 16))
+    eng.scheduler(Dynamic(4)).run()
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(s1, a + b)
+    np.testing.assert_allclose(s2, a - b)
+
+
+def test_out_pattern_non_unit():
+    # 4 work-items produce 1 output element (e.g. reduction per group).
+    def k(offset, x):
+        return x.reshape(-1, 4).sum(axis=1)
+
+    x = np.arange(256, dtype=np.float32)
+    y = np.zeros(64, np.float32)
+    eng = EngineCL().use(DeviceGroup("a"), DeviceGroup("b"))
+    prog = Program().in_(x).out(y).out_pattern(1, 4).kernel(k).work_items(256, 8)
+    eng.scheduler(Dynamic(4)).program(prog).run()
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(y, x.reshape(-1, 4).sum(axis=1))
+
+
+def test_kernel_specialization_per_device():
+    """Paper: per-device kernel variants (source/binary) = per-group jits."""
+    def generic(offset, x):
+        return x * 2.0
+
+    def specialized(offset, x):
+        return x + x  # same math, different kernel
+
+    x = np.arange(512, dtype=np.float32)
+    y = np.zeros(512, np.float32)
+    eng = EngineCL().use(
+        DeviceGroup("generic"), DeviceGroup("special", kernel=specialized)
+    )
+    eng.scheduler(Dynamic(8)).program(
+        Program().in_(x).out(y).kernel(generic).work_items(512, 16)
+    ).run()
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(y, 2.0 * x)

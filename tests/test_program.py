@@ -1,0 +1,46 @@
+import numpy as np
+import pytest
+
+from repro.core import Program
+
+
+def test_validate_requires_kernel():
+    p = Program().out(np.zeros(8)).work_items(8, 1)
+    assert any("kernel" in e for e in p.validate())
+
+
+def test_gws_inferred_from_output():
+    p = Program().out(np.zeros(64)).kernel(lambda o, x: x).out_pattern(1, 4)
+    p.validate()
+    assert p.gws == 256  # 64 outputs * 4 work-items per output
+
+
+def test_gws_lws_divisibility():
+    p = Program().out(np.zeros(10)).kernel(lambda o: None).work_items(10, 4)
+    assert any("multiple" in e for e in p.validate())
+
+
+def test_slice_inputs_ratio():
+    x = np.arange(32)
+    y = np.arange(8)  # ratio 1:4 vs gws=32
+    p = Program().in_(x).in_(y).kernel(lambda o, a, b: a).work_items(32, 4)
+    assert not p.validate()
+    a, b = p.slice_inputs(8, 16)
+    np.testing.assert_array_equal(a, x[8:24])
+    np.testing.assert_array_equal(b, y[2:6])
+
+
+def test_write_outputs_trims_bucket_padding():
+    out = np.zeros(16)
+    p = Program().out(out).kernel(lambda o: None).work_items(16, 1)
+    p.validate()
+    p.write_outputs(4, 4, np.ones(8))  # result longer than window (bucketed)
+    np.testing.assert_array_equal(out[4:8], 1.0)
+    assert out[8:].sum() == 0
+
+
+def test_write_outputs_count_mismatch():
+    p = Program().out(np.zeros(4)).kernel(lambda o: None).work_items(4, 1)
+    p.validate()
+    with pytest.raises(ValueError):
+        p.write_outputs(0, 4, (np.zeros(4), np.zeros(4)))
