@@ -35,7 +35,10 @@ def _native_time(bench, iters: int) -> float:
 
 
 def _engine_time(bench, iters: int) -> float:
-    eng = EngineCL().use(DeviceGroup("cpu:0"))
+    # Transfer cache off: _native_time re-pays device_put every iteration,
+    # so the runtime must too or fig7 stops measuring machinery overhead
+    # (the cache's amortization win is async_submit / run_iterative's story).
+    eng = EngineCL().use(DeviceGroup("cpu:0", transfer_cache_entries=0))
     prog = Program().kernel(bench["kernel"], bench["name"]).args(*bench["args"])
     for b in bench["ins"]:
         prog.in_(b)

@@ -5,7 +5,12 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
   - fig7_overhead    : us_per_call = engine time (us); derived = overhead %
   - fig9_balance     : derived = mean balance per scheduler
   - fig11_efficiency : derived = mean efficiency per scheduler
+  - async_submit     : derived = concurrent/sequential speedup on the
+                       persistent runtime (Future-based submit())
   - roofline         : derived = roofline fraction per (arch, shape) cell
+
+Also writes ``BENCH_coexec.json`` — machine-readable balance / efficiency /
+overhead so successive PRs have a perf trajectory to diff against.
 
 Fast mode (default) uses reduced iteration counts so the full suite runs in
 minutes on the CI container; ``--full`` reproduces the paper-scale settings.
@@ -13,6 +18,8 @@ minutes on the CI container; ``--full`` reproduces the paper-scale settings.
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 import numpy as np
 
@@ -27,7 +34,7 @@ def table3_usability(rows: list[str]) -> None:
     rows.append(f"table3_usability_mean_ratio,0,{np.mean(ratios):.2f}")
 
 
-def fig7_overhead(rows: list[str], iters: int) -> None:
+def fig7_overhead(rows: list[str], report: dict, iters: int) -> None:
     from benchmarks import overhead as O
 
     res = O.run(iters=iters)
@@ -36,26 +43,80 @@ def fig7_overhead(rows: list[str], iters: int) -> None:
             f"fig7_overhead_{rr['benchmark']},{rr['enginecl_ms'] * 1e3:.0f},"
             f"{rr['overhead_pct']:.2f}"
         )
-    rows.append(f"fig7_overhead_mean,0,{np.mean([rr['overhead_pct'] for rr in res]):.2f}")
+    mean = float(np.mean([rr["overhead_pct"] for rr in res]))
+    rows.append(f"fig7_overhead_mean,0,{mean:.2f}")
+    report["overhead"] = {
+        "per_benchmark": {rr["benchmark"]: rr["overhead_pct"] for rr in res},
+        "mean_pct": mean,
+    }
 
 
-def fig9_11_coexec(rows: list[str], target_seconds: float) -> None:
+def fig9_11_coexec(rows: list[str], report: dict, target_seconds: float) -> None:
     from benchmarks import coexec as C
 
     res = C.run(target_seconds=target_seconds)
     by_sched: dict = {}
     for rr in res:
         by_sched.setdefault(rr["scheduler"], []).append(rr)
+    report["coexec"] = {}
     for s, items in by_sched.items():
-        bal = np.mean([i["balance"] for i in items])
-        eff = np.mean([i["efficiency"] for i in items])
-        t = np.mean([i["coexec_s"] for i in items])
+        bal = float(np.mean([i["balance"] for i in items]))
+        eff = float(np.mean([i["efficiency"] for i in items]))
+        t = float(np.mean([i["coexec_s"] for i in items]))
         rows.append(f"fig9_balance_{s},{t * 1e6:.0f},{bal:.3f}")
         rows.append(f"fig11_efficiency_{s},{t * 1e6:.0f},{eff:.3f}")
+        report["coexec"][s] = {
+            "balance": bal,
+            "efficiency": eff,
+            "speedup": float(np.mean([i["speedup"] for i in items])),
+            "coexec_s": t,
+        }
+
+
+def async_submit(rows: list[str], report: dict, n_programs: int = 4) -> None:
+    """Future-based submit(): N independent Programs in flight on the
+    persistent workers vs. the same Programs run() back-to-back."""
+    from repro.core import DeviceGroup, Dynamic, EngineCL, Program
+
+    n, lws = 1 << 15, 64
+
+    def kern(offset, x):
+        return np.float32(2.0) * x + 1.0
+
+    def make_programs():
+        progs = []
+        for i in range(n_programs):
+            x = np.arange(n, dtype=np.float32) * (i + 1)
+            y = np.zeros(n, np.float32)
+            progs.append(Program().in_(x).out(y).kernel(kern).work_items(n, lws))
+        return progs
+
+    eng = EngineCL().use(DeviceGroup("a"), DeviceGroup("b")).scheduler(Dynamic(8))
+    for p in make_programs():  # warm compile + workers
+        eng.program(p).run()
+
+    t0 = time.perf_counter()
+    for p in make_programs():
+        eng.program(p).run()
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    handles = [eng.submit(p) for p in make_programs()]
+    for h in handles:
+        h.result()
+    t_async = time.perf_counter() - t0
+
+    speedup = t_seq / t_async if t_async > 0 else 0.0
+    rows.append(f"async_submit_speedup,{t_async * 1e6:.0f},{speedup:.2f}")
+    report["async_submit"] = {
+        "n_programs": n_programs,
+        "sequential_s": t_seq,
+        "concurrent_s": t_async,
+        "speedup": speedup,
+    }
 
 
 def roofline(rows: list[str]) -> None:
-    import json
     from pathlib import Path
 
     from benchmarks.roofline import fraction
@@ -74,19 +135,31 @@ def roofline(rows: list[str]) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--tables", nargs="*", default=["usability", "overhead", "coexec", "roofline"])
+    ap.add_argument(
+        "--tables", nargs="*",
+        default=["usability", "overhead", "coexec", "async", "roofline"],
+    )
+    ap.add_argument("--json", default="BENCH_coexec.json",
+                    help="machine-readable balance/efficiency/overhead report")
     args = ap.parse_args()
 
     rows: list[str] = ["name,us_per_call,derived"]
+    report: dict = {}
     if "usability" in args.tables:
         table3_usability(rows)
     if "overhead" in args.tables:
-        fig7_overhead(rows, iters=5 if args.full else 2)
+        fig7_overhead(rows, report, iters=5 if args.full else 2)
     if "coexec" in args.tables:
-        fig9_11_coexec(rows, target_seconds=2.0 if args.full else 0.75)
+        fig9_11_coexec(rows, report, target_seconds=2.0 if args.full else 0.75)
+    if "async" in args.tables:
+        async_submit(rows, report)
     if "roofline" in args.tables:
         roofline(rows)
     print("\n".join(rows))
+    if report and args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")  # after the CSV block: stdout contract
 
 
 if __name__ == "__main__":

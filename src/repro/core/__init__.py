@@ -1,12 +1,19 @@
 """EngineCL core: the paper's runtime, adapted to JAX (see DESIGN.md §2).
 
-Tier-1: EngineCL, Program.  Tier-2: DeviceGroup, DeviceMask, schedulers.
-Tier-3: Introspector, ThroughputRater, Scheduler base.
+Tier-1: EngineCL, Program.  Tier-2: DeviceGroup, DeviceMask, Runtime,
+RunHandle, schedulers.  Tier-3: Introspector, ThroughputRater, Scheduler
+base, GroupExecutor.
 """
 from repro.core.device import DeviceGroup  # noqa: F401
 from repro.core.engine import DeviceMask, EngineCL, discover  # noqa: F401
 from repro.core.introspector import Introspector, coexec_metrics  # noqa: F401
 from repro.core.program import Program  # noqa: F401
+from repro.core.runtime import (  # noqa: F401
+    GroupExecutor,
+    RunError,
+    RunHandle,
+    Runtime,
+)
 from repro.core.rating import ThroughputRater  # noqa: F401
 from repro.core.scheduler.base import Scheduler  # noqa: F401
 from repro.core.scheduler.dynamic import Dynamic  # noqa: F401

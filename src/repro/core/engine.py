@@ -1,4 +1,4 @@
-"""Tier-1 ``EngineCL`` facade.
+"""Tier-1 ``EngineCL`` facade over the persistent runtime.
 
 Mirrors the paper's API (§6) on JAX:
 
@@ -9,28 +9,31 @@ Mirrors the paper's API (§6) on JAX:
     engine.program(program)
     engine.run()                                    # co-executes on all groups
 
-Runtime architecture = the paper's multi-threaded design: one dispatcher
-thread per device group pulls packages from the (thread-safe) scheduler,
-enqueues transfer + compute asynchronously (JAX async dispatch ≙ OpenCL
-event chaining), blocks only on completion, writes results into the host
-output buffers and reports timing to the Introspector and the scheduler
-(adaptive rating).
+    handle = engine.submit(other_program)           # async: Future-based API
+    handle.result()                                 # outputs, or raises
+
+Since the persistent-runtime refactor (see DESIGN.md) the engine no longer
+spawns threads per run: a resident ``Runtime`` owns one long-lived
+dispatcher thread per ``DeviceGroup``, fed by a run queue.  ``run()`` keeps
+its exact blocking semantics (submit + wait), while ``submit()`` returns a
+``RunHandle`` (``.result()``, ``.done()``, ``.metrics``) so several Programs
+can be in flight.  Per-run state — scheduler bookkeeping (cloned), error
+list, introspector — lives on the handle, so concurrent runs can't clobber
+each other.  Host→device transfers go through the per-group transfer cache
+(``DeviceGroup._input_slice``), which iterative and serving workloads hit
+instead of re-transferring unchanged buffers.
 """
 from __future__ import annotations
 
 import enum
-import threading
-import time
-import traceback
 from typing import List, Optional, Sequence
-
-import numpy as np
 
 import jax
 
 from repro.core.device import DeviceGroup
-from repro.core.introspector import Introspector, PackageRecord
+from repro.core.introspector import Introspector
 from repro.core.program import Program
+from repro.core.runtime import RunHandle, Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
 
@@ -42,18 +45,25 @@ class DeviceMask(enum.Flag):
     ALL = CPU | GPU | TPU
 
 
-def discover(mask: DeviceMask = DeviceMask.ALL) -> List[DeviceGroup]:
-    """Platform/device discovery (paper challenge 1) — one group per device."""
-    kinds = {
-        DeviceMask.CPU: ("cpu",),
-        DeviceMask.GPU: ("gpu", "cuda", "rocm"),
-        DeviceMask.TPU: ("tpu",),
-    }
+# jax.Device.platform is already normalized: CUDA and ROCm devices both
+# report "gpu" (the vendor lives in device_kind/client platform), so masks
+# match on the canonical platform names only.
+_MASK_PLATFORMS = {
+    DeviceMask.CPU: ("cpu",),
+    DeviceMask.GPU: ("gpu",),
+    DeviceMask.TPU: ("tpu",),
+}
+
+
+def discover(mask: DeviceMask = DeviceMask.ALL, devices=None) -> List[DeviceGroup]:
+    """Platform/device discovery (paper challenge 1) — one group per device.
+
+    ``devices`` overrides ``jax.devices()`` (tests inject fakes)."""
     wanted = tuple(
-        p for flag, plats in kinds.items() if flag in mask for p in plats
+        p for flag, plats in _MASK_PLATFORMS.items() if flag in mask for p in plats
     )
     groups = []
-    for d in jax.devices():
+    for d in devices if devices is not None else jax.devices():
         if d.platform in wanted:
             groups.append(DeviceGroup(f"{d.platform}:{d.id}", [d]))
     return groups
@@ -64,11 +74,14 @@ class EngineCL:
         self._groups: List[DeviceGroup] = []
         self._scheduler: Scheduler = Static()
         self._program: Optional[Program] = None
-        self._errors: List[str] = []
-        self.introspector = Introspector()
+        self._engine_errors: List[str] = []  # pre-submit errors (no handle yet)
         self._gws: Optional[int] = None
         self._lws: Optional[int] = None
         self._pipeline_depth = 2  # packages enqueued ahead per device
+        self._runtime: Optional[Runtime] = None
+        self._runtime_sig: tuple = ()
+        self._last_handle: Optional[RunHandle] = None
+        self._idle_introspector = Introspector()  # before the first run
 
     # ----------------------------------------------------------- Tier-1 API
     def use(self, *what) -> "EngineCL":
@@ -104,12 +117,76 @@ class EngineCL:
         self._gws, self._lws = gws, lws
         return self
 
+    @property
+    def introspector(self) -> Introspector:
+        """The most recent run's introspector (per-run since the refactor)."""
+        if self._last_handle is not None:
+            return self._last_handle.introspector
+        return self._idle_introspector
+
+    # ------------------------------------------------------------ lifecycle
+    def _ensure_runtime(self) -> Runtime:
+        if not self._groups:
+            self._groups = discover(DeviceMask.ALL)
+        sig = tuple(id(g) for g in self._groups)
+        if self._runtime is None or self._runtime_sig != sig:
+            if self._runtime is not None:
+                self._runtime.shutdown()
+            self._runtime = Runtime(self._groups, pipeline_depth=self._pipeline_depth)
+            self._runtime_sig = sig
+        return self._runtime
+
+    def shutdown(self) -> None:
+        """Stop the resident workers (daemon threads; optional to call)."""
+        if self._runtime is not None:
+            self._runtime.shutdown()
+            self._runtime = None
+            self._runtime_sig = ()
+
+    def __enter__(self) -> "EngineCL":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------ async API
+    def submit(self, program: Optional[Program] = None) -> RunHandle:
+        """Enqueue a run on the persistent workers; non-blocking.
+
+        Multiple Programs may be in flight; each handle carries its own
+        errors/metrics.  Programs sharing host buffers must be serialized by
+        the caller (wait one handle before submitting the dependent run)."""
+        prog = program if program is not None else self._program
+        if prog is None:
+            raise ValueError("no program set")
+        if self._gws is not None:
+            prog.gws = self._gws
+        if self._lws is not None:
+            prog.lws = self._lws
+        handle = self._ensure_runtime().submit(prog, self._scheduler)
+        # The newest run supersedes stale engine-level error state; the
+        # engine's error API now tracks this (possibly in-flight) handle.
+        self._engine_errors = []
+        self._last_handle = handle
+        return handle
+
+    # ------------------------------------------------------------- run loop
+    def run(self) -> "EngineCL":
+        """Blocking run of the current program (tier-1 semantics unchanged)."""
+        if self._program is None:
+            self._engine_errors = ["no program set"]
+            self._last_handle = None
+            return self
+        self.submit().wait()
+        return self
+
     # ---- paper §10 future work: multi-kernel & iterative execution ------
     def run_pipeline(self, *programs: Program) -> "EngineCL":
         """Run several Programs back-to-back (multi-kernel execution).
 
         Programs share host buffers by construction (pass one program's out
-        array as the next one's in_) — the paper's 'linked buffers' idea."""
+        array as the next one's in_) — the paper's 'linked buffers' idea —
+        so each submit is waited before the dependent one is enqueued."""
         for p in programs:
             self.program(p).run()
             if self.has_errors():
@@ -118,12 +195,13 @@ class EngineCL:
 
     def run_iterative(self, n_iters: int, swap: Optional[Sequence[tuple]] = None) -> "EngineCL":
         """Iterative kernels (e.g. NBody steps): re-run the current program
-        ``n_iters`` times; ``swap`` lists (in_index, out_index) buffer pairs
-        ping-ponged between iterations (device-resident state would be the
-        TPU-side optimization; host ping-pong matches the paper's model)."""
+        ``n_iters`` times on the resident workers; ``swap`` lists
+        (in_index, out_index) buffer pairs ping-ponged between iterations.
+        Unswapped input buffers stay in the per-group transfer cache, so
+        iterations re-transfer only what actually changed."""
         prog = self._program
         if prog is None:
-            self._errors.append("no program set")
+            self._engine_errors = ["no program set"]
             return self
         for _ in range(n_iters):
             self.run()
@@ -131,79 +209,17 @@ class EngineCL:
                 break
             if swap:
                 for i_in, i_out in swap:
-                    prog._ins[i_in], prog._outs[i_out] = (
-                        prog._outs[i_out],
-                        np.ascontiguousarray(prog._ins[i_in]),
-                    )
+                    prog.swap_buffers(i_in, i_out)
         return self
 
+    # --------------------------------------------------------------- errors
     def has_errors(self) -> bool:
-        return bool(self._errors)
+        if self._engine_errors:
+            return True
+        return self._last_handle is not None and self._last_handle.has_errors()
 
     def get_errors(self) -> List[str]:
-        return list(self._errors)
-
-    # ------------------------------------------------------------- run loop
-    def run(self) -> "EngineCL":
-        prog = self._program
-        self._errors = []
-        if prog is None:
-            self._errors.append("no program set")
-            return self
-        if not self._groups:
-            self._groups = discover(DeviceMask.ALL)
-        if self._gws is not None:
-            prog.gws = self._gws
-        if self._lws is not None:
-            prog.lws = self._lws
-        errs = prog.validate()
-        if errs:
-            self._errors.extend(errs)
-            return self
-
-        sched = self._scheduler
-        sched.prepare(prog.n_work_groups, prog.lws, self._groups)
-        self.introspector.start_run()
-
-        threads = [
-            threading.Thread(target=self._device_worker, args=(g, prog, sched), daemon=True)
-            for g in self._groups
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        self.introspector.end_run()
-        return self
-
-    def _device_worker(self, group: DeviceGroup, prog: Program, sched: Scheduler) -> None:
-        """Paper's Device thread: pull → enqueue (async) → complete → write."""
-        pending: list = []  # (offset, size, result, t_enqueue, t_start)
-        try:
-            while True:
-                pkg = sched.next_package(group)
-                if pkg is not None:
-                    off, size = pkg
-                    t_enq = time.perf_counter()
-                    res = group.execute_chunk(prog, off, size)  # async dispatch
-                    pending.append((off, size, res, t_enq))
-                if pkg is None and not pending:
-                    break
-                # Block on the oldest package once the pipeline is full (or
-                # the stream ended) — transfers/compute of newer packages
-                # overlap with this wait.
-                if pending and (len(pending) >= self._pipeline_depth or pkg is None):
-                    off, size, res, t_enq = pending.pop(0)
-                    t_start = t_enq  # async: service time measured to completion
-                    jax.block_until_ready(res)
-                    t_end = time.perf_counter()
-                    cost = prog.cost_fn(off, size) if prog.cost_fn else None
-                    group.simulate_service_time(size, t_end - t_start, cost)
-                    t_end = time.perf_counter()
-                    prog.write_outputs(off, size, res)
-                    self.introspector.record(
-                        PackageRecord(group.name, off, size, t_enq, t_start, t_end)
-                    )
-                    sched.observe(group, size, t_end - t_start)
-        except Exception:  # noqa: BLE001 — surfaced via engine error API
-            self._errors.append(f"{group.name}: {traceback.format_exc()}")
+        errs = list(self._engine_errors)
+        if self._last_handle is not None:
+            errs.extend(self._last_handle.errors())
+        return errs

@@ -17,10 +17,58 @@ consistently — the runtime slices work-items, never raw indices.
 """
 from __future__ import annotations
 
+import itertools
+import threading
+import weakref
 from fractions import Fraction
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
+
+# --------------------------------------------------------- buffer versioning
+# The device-resident transfer cache (DeviceGroup) keys cached transfers on a
+# *version token*: a process-unique integer assigned per host buffer and
+# re-assigned whenever the buffer's contents change through runtime APIs
+# (write_outputs, swap_buffers, invalidate).  Tokens come from one global
+# counter, so a recycled ``id()`` after garbage collection can never alias a
+# live cache entry.  Buffers that don't support weakrefs are uncacheable
+# (version None) — correctness never depends on the finalizer firing.
+
+_version_counter = itertools.count(1)
+_versions: dict[int, int] = {}
+_versions_lock = threading.Lock()
+
+
+def _drop_version(key: int) -> None:
+    # GC callback: may fire on a thread that already holds _versions_lock
+    # (any allocation inside the locked regions can trigger collection), so
+    # it must not acquire it.  A bare dict.pop is atomic under the GIL, and
+    # the worst race outcome is a lost registration — the next lookup just
+    # assigns a fresh (never-reused) token, i.e. a cache miss, never a stale
+    # hit.
+    _versions.pop(key, None)
+
+
+def buffer_version(buf) -> Optional[int]:
+    """Current version token for ``buf`` (None = not cacheable)."""
+    key = id(buf)
+    with _versions_lock:
+        v = _versions.get(key)
+        if v is None:
+            try:
+                weakref.finalize(buf, _drop_version, key)
+            except TypeError:
+                return None
+            v = _versions[key] = next(_version_counter)
+        return v
+
+
+def bump_version(buf) -> None:
+    """Invalidate cached transfers of ``buf`` (its contents changed)."""
+    key = id(buf)
+    with _versions_lock:
+        if key in _versions:
+            _versions[key] = next(_version_counter)
 
 
 class Program:
@@ -122,6 +170,28 @@ class Program:
             r = self.buffer_ratio(b)
             lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
             b[lo:hi] = np.asarray(res)[: hi - lo]  # trim bucket padding
+            bump_version(b)  # output changed: stale any cached device copy
+
+    def swap_buffers(self, i_in: int, i_out: int) -> None:
+        """Ping-pong one (input, output) buffer pair between iterations.
+
+        The just-written output becomes the next iteration's input; the old
+        input is copied so the kernel keeps a writable, contiguous output.
+        Versions are bumped so the transfer cache can't serve stale slices."""
+        new_in = self._outs[i_out]
+        new_out = np.ascontiguousarray(self._ins[i_in])
+        self._ins[i_in], self._outs[i_out] = new_in, new_out
+        bump_version(new_in)
+        bump_version(new_out)
+
+    def invalidate(self, buf=None) -> None:
+        """Mark host buffers as externally modified (drops cached transfers).
+
+        Call after mutating an input array in place outside the runtime; with
+        no argument every buffer of this Program is invalidated."""
+        targets = [buf] if buf is not None else self._ins + self._outs
+        for b in targets:
+            bump_version(b)
 
     @property
     def n_work_groups(self) -> int:

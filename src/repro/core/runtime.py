@@ -1,0 +1,250 @@
+"""Persistent asynchronous runtime (Tier-2; see DESIGN.md).
+
+The paper's headline overhead result (≤2.8% vs. native OpenCL) relies on a
+*resident* multi-threaded runtime: device threads and queues live across
+kernel launches.  This module is that runtime for the JAX port:
+
+- ``GroupExecutor`` — one long-lived daemon thread per ``DeviceGroup``
+  draining a FIFO job queue, so repeated runs/steps never pay thread spawn.
+- ``RunHandle``    — future-like per-run state: completion event, a private
+  ``Introspector``, and a lock-protected error list (concurrent runs cannot
+  clobber each other's errors).
+- ``Runtime``      — ``submit(program, scheduler) -> RunHandle``.  The
+  engine's scheduler is ``clone()``d per run so scheduler bookkeeping is
+  run-scoped; every group worker then pulls packages from the clone until
+  the run is exhausted.
+
+``EngineCL`` is a facade over this: ``run()`` = ``submit()`` + wait, with
+identical blocking semantics; ``submit()`` lets several Programs be in
+flight on the same persistent workers (each group processes queued runs in
+submission order, pipelining across runs).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+from repro.core.device import DeviceGroup
+from repro.core.introspector import Introspector, PackageRecord
+from repro.core.program import Program
+from repro.core.scheduler.base import Scheduler
+
+
+class RunError(RuntimeError):
+    """Raised by ``RunHandle.result()`` when any device worker failed."""
+
+    def __init__(self, errors: Sequence[str]) -> None:
+        self.errors = list(errors)
+        super().__init__("\n".join(self.errors))
+
+
+class RunHandle:
+    """Future-like handle for one submitted run."""
+
+    def __init__(self, program: Program, scheduler: Scheduler, n_workers: int,
+                 introspector: Optional[Introspector] = None) -> None:
+        self.program = program
+        self.scheduler = scheduler
+        self.introspector = introspector or Introspector()
+        self._lock = threading.Lock()
+        self._errors: List[str] = []
+        self._pending_workers = n_workers
+        self._started = False
+        self._done = threading.Event()
+
+    # -- worker-facing -----------------------------------------------------
+    def _mark_started(self) -> None:
+        """First worker to pick up the run stamps t_run_start — metrics of
+        queued async runs must not include the wait behind earlier runs."""
+        with self._lock:
+            if self._started:
+                return
+            self._started = True
+        self.introspector.start_run()
+
+    def record_error(self, msg: str) -> None:
+        with self._lock:
+            self._errors.append(msg)
+
+    def _worker_finished(self) -> None:
+        with self._lock:
+            self._pending_workers -= 1
+            last = self._pending_workers <= 0
+        if last:
+            self.introspector.end_run()
+            self._done.set()
+
+    def _fail(self, msgs: Sequence[str]) -> None:
+        """Complete immediately without running (e.g. validation errors)."""
+        with self._lock:
+            self._errors.extend(msgs)
+            self._pending_workers = 0
+        self._done.set()
+
+    # -- caller-facing -----------------------------------------------------
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> list:
+        """Block until complete; re-raise worker errors; return outputs."""
+        if not self.wait(timeout):
+            raise TimeoutError("run did not complete within timeout")
+        if self._errors:
+            raise RunError(self._errors)
+        return self.program.outputs
+
+    def has_errors(self) -> bool:
+        with self._lock:
+            return bool(self._errors)
+
+    def errors(self) -> List[str]:
+        with self._lock:
+            return list(self._errors)
+
+    @property
+    def metrics(self) -> dict:
+        """Per-run metrics (balance, work share, packages) — see Introspector."""
+        return self.introspector.summary()
+
+
+class GroupExecutor:
+    """One persistent worker thread per DeviceGroup, FIFO job order.
+
+    Jobs for one group run serially on its thread (a device computes
+    packages serially); jobs across groups run concurrently.  Also reused by
+    HeteroTrainer so training steps don't re-spawn threads either."""
+
+    def __init__(self, groups: Sequence[DeviceGroup], name: str = "enginecl") -> None:
+        self.groups = list(groups)
+        self._queues: dict[int, "queue.Queue"] = {}
+        self._threads: List[threading.Thread] = []
+        self._alive = True
+        for i, g in enumerate(self.groups):
+            q: "queue.Queue" = queue.Queue()
+            self._queues[id(g)] = q
+            t = threading.Thread(
+                target=self._worker, args=(q,), name=f"{name}-{g.name}-{i}", daemon=True
+            )
+            t.start()
+            self._threads.append(t)
+
+    @staticmethod
+    def _worker(q: "queue.Queue") -> None:
+        while True:
+            job = q.get()
+            if job is None:
+                return
+            fn, on_done = job
+            try:
+                fn()
+            except BaseException:  # noqa: BLE001 — a resident worker must
+                pass  # survive anything a job raises; jobs report their own
+            finally:
+                if on_done is not None:
+                    on_done()
+
+    def submit(self, group: DeviceGroup, fn: Callable[[], None],
+               on_done: Optional[Callable[[], None]] = None) -> None:
+        if not self._alive:
+            raise RuntimeError("executor is shut down")
+        self._queues[id(group)].put((fn, on_done))
+
+    def shutdown(self) -> None:
+        if not self._alive:
+            return
+        self._alive = False
+        for q in self._queues.values():
+            q.put(None)  # after queued jobs: workers drain, then exit
+
+    def __del__(self) -> None:  # best-effort: release threads with the owner
+        try:
+            self.shutdown()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
+
+
+class Runtime:
+    """Resident execution core: persistent dispatcher threads + run queue."""
+
+    def __init__(self, groups: Sequence[DeviceGroup], *, pipeline_depth: int = 2) -> None:
+        if not groups:
+            raise ValueError("Runtime needs at least one DeviceGroup")
+        self.groups = list(groups)
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.executor = GroupExecutor(self.groups)
+        self._submit_lock = threading.Lock()
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, program: Program, scheduler: Scheduler) -> RunHandle:
+        """Enqueue one run on the persistent workers; returns immediately.
+
+        Validation errors complete the handle immediately (``result()``
+        raises ``RunError``).  Runs are processed per group in submission
+        order; distinct groups may be in different runs at the same time, so
+        Programs sharing host buffers must be submitted-and-waited serially
+        (``run_pipeline`` does)."""
+        handle = RunHandle(program, scheduler.clone(), len(self.groups))
+        errs = program.validate()
+        if errs:
+            handle._fail(errs)
+            return handle
+        handle.scheduler.prepare(program.n_work_groups, program.lws, self.groups)
+        with self._submit_lock:  # same run order in every group's queue
+            for g in self.groups:
+                self.executor.submit(
+                    g,
+                    lambda g=g, h=handle: self._process(g, h),
+                    on_done=handle._worker_finished,
+                )
+        return handle
+
+    def shutdown(self) -> None:
+        self.executor.shutdown()
+
+    # --------------------------------------------------------------- workers
+    def _process(self, group: DeviceGroup, handle: RunHandle) -> None:
+        """Paper's Device thread body: pull → enqueue (async) → complete →
+        write, against this run's scheduler/introspector/error list."""
+        prog, sched = handle.program, handle.scheduler
+        handle._mark_started()
+        pending: list = []  # (offset, size, result, t_enqueue)
+        try:
+            while True:
+                pkg = sched.next_package(group)
+                if pkg is not None:
+                    off, size = pkg
+                    t_enq = time.perf_counter()
+                    res = group.execute_chunk(prog, off, size)  # async dispatch
+                    pending.append((off, size, res, t_enq))
+                if pkg is None and not pending:
+                    break
+                # Block on the oldest package once the pipeline is full (or
+                # the stream ended) — transfers/compute of newer packages
+                # overlap with this wait.
+                if pending and (len(pending) >= self.pipeline_depth or pkg is None):
+                    off, size, res, t_enq = pending.pop(0)
+                    t_start = t_enq  # async: service time measured to completion
+                    jax.block_until_ready(res)
+                    t_end = time.perf_counter()
+                    cost = prog.cost_fn(off, size) if prog.cost_fn else None
+                    group.simulate_service_time(size, t_end - t_start, cost)
+                    t_end = time.perf_counter()
+                    prog.write_outputs(off, size, res)
+                    handle.introspector.record(
+                        PackageRecord(group.name, off, size, t_enq, t_start, t_end)
+                    )
+                    sched.observe(group, size, t_end - t_start)
+        except BaseException:  # noqa: BLE001 — surfaced via RunHandle error
+            # API.  BaseException, not Exception: a KeyboardInterrupt/
+            # SystemExit escaping from kernel code must still be recorded
+            # (else the handle completes "successfully" with zeroed outputs)
+            # and must not kill the resident worker thread.
+            handle.record_error(f"{group.name}: {traceback.format_exc()}")

@@ -21,6 +21,14 @@ class Scheduler:
         self._lws = 1
         self._devices = []
 
+    def clone(self) -> "Scheduler":
+        """Fresh scheduler with this one's *configuration* but no run state.
+
+        The runtime clones the engine's scheduler per submitted run, so
+        concurrent runs never share `_remaining`/`_next_group` bookkeeping.
+        Subclasses with constructor arguments override this."""
+        return type(self)()
+
     # -- lifecycle ---------------------------------------------------------
     def prepare(self, total_groups: int, lws: int, devices) -> None:
         with self._lock:

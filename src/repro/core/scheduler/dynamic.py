@@ -14,6 +14,9 @@ class Dynamic(Scheduler):
         self.num_packages = max(1, num_packages)
         self._pkg_groups = 1
 
+    def clone(self) -> "Dynamic":
+        return Dynamic(self.num_packages)
+
     def _prepare(self) -> None:
         total = self._remaining
         self._pkg_groups = max(1, -(-total // self.num_packages))

@@ -27,6 +27,9 @@ class HGuided(Scheduler):
         self.adaptive = adaptive
         self._rater = ThroughputRater()
 
+    def clone(self) -> "HGuided":
+        return HGuided(self.k, self.adaptive)
+
     def _prepare(self) -> None:
         if self.adaptive:
             self._rater.reset({id(d): d.power for d in self._devices})

@@ -20,6 +20,9 @@ class Static(Scheduler):
         self.reverse = reverse
         self._plan: dict[int, tuple[int, int]] = {}
 
+    def clone(self) -> "Static":
+        return Static(self.props, self.reverse)
+
     def _prepare(self) -> None:
         devs = list(self._devices)
         if self.reverse:

@@ -4,4 +4,5 @@ from repro.distributed.sharding import (  # noqa: F401
     maybe_axis,
     set_current_mesh,
     shard,
+    shard_map,
 )

@@ -33,12 +33,35 @@ def batch_axes(mesh: Optional[Mesh] = None):
     return axes if axes else None
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable shard_map.
+
+    ``jax.shard_map`` (with ``check_vma``) only exists on newer jax; older
+    releases ship ``jax.experimental.shard_map.shard_map`` with the same
+    knob named ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def _normalize(axes):
+    """Canonical pspec entry: 1-tuples become the bare axis name, so
+    PartitionSpec equality matches hand-written specs."""
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
 def _resolve(entry: Any, mesh: Mesh) -> Any:
     """Map a logical entry to physical mesh axes (or None)."""
     if entry is None:
         return None
     if entry == "batch":
-        return batch_axes(mesh)
+        return _normalize(batch_axes(mesh))
     if entry == "model":
         return "model" if "model" in mesh.axis_names else None
     if isinstance(entry, tuple):
@@ -49,7 +72,7 @@ def _resolve(entry: Any, mesh: Mesh) -> Any:
                 out.extend(r)
             elif r is not None:
                 out.append(r)
-        return tuple(out) if out else None
+        return _normalize(tuple(out)) if out else None
     return entry if entry in mesh.axis_names else None
 
 

@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed import shard
+from repro.distributed import shard, shard_map
 from repro.models import layers as L
 from repro.models.params import Spec
 
@@ -217,7 +217,7 @@ def flash_decode_attention(q, cache, pos, cfg, *, window=0):
     spec_q = P(bax, None, None, None)
     spec_kv = P(bax, "model", None, None)
     spec_pos = P(bax, "model")
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(spec_q, spec_kv, spec_kv, spec_pos),

@@ -1,11 +1,24 @@
 """Serving steps: prefill (prompt → cache) and decode (one token, KV cache).
 
 ``decode_*`` / ``long_*`` dry-run cells lower make_decode_step — one new
-token against a seq_len-deep cache — per the assignment."""
+token against a seq_len-deep cache — per the assignment.
+
+Params are cast to the compute dtype through a device-resident cache
+(``cast_params_cached``): a serving loop calls prefill/decode thousands of
+times against the same immutable param tree, so the cast (and its transfer,
+when running eagerly) is paid once per (params, dtype), not per token.
+Traced values bypass the cache — under ``jax.jit`` XLA already folds the
+cast, and caching tracers across traces would leak them.
+"""
 from __future__ import annotations
+
+import weakref
 
 import jax
 import jax.numpy as jnp
+
+# (leaf ids, dtype) -> cast tree, dropped when the source tree is collected.
+_cast_cache: dict = {}
 
 
 def _cast_float(tree, dtype):
@@ -15,9 +28,38 @@ def _cast_float(tree, dtype):
     )
 
 
+def cast_params_cached(tree, dtype):
+    """``_cast_float`` memoized on leaf identities (concrete values only)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        return _cast_float(tree, dtype)
+    # treedef in the key: identical leaves in a different container must
+    # not hit the other structure's entry.
+    key = (treedef, tuple(map(id, leaves)), str(jnp.dtype(dtype)))
+    hit = _cast_cache.get(key)
+    if hit is not None:
+        return hit
+    out = _cast_float(tree, dtype)
+    out_leaves = jax.tree_util.tree_leaves(out)
+    if all(o is i for o, i in zip(out_leaves, leaves)):
+        # No-op cast (params already in compute dtype): nothing to memoize,
+        # and caching would hold strong refs to the very leaves whose death
+        # is the only eviction trigger — pinning params forever.
+        return out
+    try:
+        # Containers (dicts) aren't weakref-able; finalize on every leaf so
+        # the entry dies before any keyed id can be recycled.
+        for leaf in leaves:
+            weakref.finalize(leaf, _cast_cache.pop, key, None)
+    except TypeError:
+        return out  # not weakref-able: don't cache (no eviction path)
+    _cast_cache[key] = out
+    return out
+
+
 def make_prefill_step(cfg, api):
     def prefill_step(params, batch, cache):
-        params = _cast_float(params, cfg.compute_dtype)
+        params = cast_params_cached(params, cfg.compute_dtype)
         logits, cache = api.prefill(params, batch, cfg, cache)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return next_tok, cache
@@ -27,7 +69,7 @@ def make_prefill_step(cfg, api):
 
 def make_decode_step(cfg, api):
     def decode_step(params, cache, token, pos):
-        params = _cast_float(params, cfg.compute_dtype)
+        params = cast_params_cached(params, cfg.compute_dtype)
         logits, cache = api.decode(params, token, pos, cfg, cache)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return next_tok, cache

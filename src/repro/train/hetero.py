@@ -6,8 +6,9 @@ throughput.  Each step:
 1. the scheduler (Static over EMA-rated powers — the paper's HGuided
    "computing power" made adaptive, at step granularity; see DESIGN.md §2)
    partitions the global batch into per-group microbatch shares;
-2. every group computes grads on its share concurrently (one dispatcher
-   thread per group — the paper's Device threads);
+2. every group computes grads on its share concurrently on the *persistent*
+   per-group workers (core.runtime.GroupExecutor — the paper's resident
+   Device threads; no thread spawn per step);
 3. grads are combined host-side, weighted by actual token counts, optionally
    int8-compressed (cross-pod DCN link), and AdamW is applied once;
 4. updated params are broadcast; measured step times re-rate group powers —
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.device import DeviceGroup
 from repro.core.rating import ThroughputRater
+from repro.core.runtime import GroupExecutor
 from repro.optim import adamw_update, lr_schedule
 from repro.train.compression import ErrorFeedback, compress_tree, decompress_tree
 
@@ -45,11 +47,16 @@ class HeteroTrainer:
         self.rater = ThroughputRater(alpha=0.5)
         self.rater.reset({id(g): g.power for g in groups})
         self._ef = {id(g): ErrorFeedback() for g in groups}
+        self._executor = GroupExecutor(groups, name="hetero")
 
         def loss_of(params, batch):
             return api.forward_train(params, batch, cfg)
 
         self._grad_fn = jax.jit(jax.value_and_grad(loss_of))
+
+    def shutdown(self) -> None:
+        """Stop the resident per-group workers (daemon threads; optional)."""
+        self._executor.shutdown()
 
     # ---------------------------------------------------------------- shares
     def partition(self, batch_size: int) -> List[int]:
@@ -71,6 +78,9 @@ class HeteroTrainer:
         offsets = np.concatenate([[0], np.cumsum(shares)]).astype(int)
         results: dict[int, tuple] = {}
         errors: list[str] = []
+        lock = threading.Lock()
+        done = threading.Event()
+        pending = len(self.groups)
 
         def worker(i: int, group: DeviceGroup) -> None:
             try:
@@ -85,15 +95,27 @@ class HeteroTrainer:
                 dt = max(time.perf_counter() - t0, 1e-9)
                 if self.compress:
                     grads = decompress_tree(self._ef[id(group)].compress(grads))
-                results[i] = (float(loss), grads, hi - lo, dt)
-            except Exception as e:  # noqa: BLE001
-                errors.append(f"{group.name}: {e!r}")
+                with lock:
+                    results[i] = (float(loss), grads, hi - lo, dt)
+            except BaseException as e:  # noqa: BLE001 — even SystemExit/
+                # KeyboardInterrupt must surface as a step error: the
+                # executor swallows escapees, and a silently missing share
+                # would renormalize into a wrong gradient.
+                with lock:
+                    errors.append(f"{group.name}: {e!r}")
 
-        threads = [threading.Thread(target=worker, args=(i, g)) for i, g in enumerate(self.groups)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        def finished() -> None:
+            nonlocal pending
+            with lock:
+                pending -= 1
+                last = pending == 0
+            if last:
+                done.set()
+
+        # Persistent per-group workers: steps enqueue shares, never spawn.
+        for i, g in enumerate(self.groups):
+            self._executor.submit(g, lambda i=i, g=g: worker(i, g), on_done=finished)
+        done.wait()
         if errors:
             raise RuntimeError("; ".join(errors))
 

@@ -1,0 +1,45 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+Test modules do::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+
+so tier-1 collection never hard-errors: property-based tests skip (via
+``pytest.importorskip`` at call time, so the skip reason names the missing
+package) while plain unit tests in the same module still run.  CI installs
+requirements-dev.txt and runs the property tests for real.
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def decorate(fn):
+        def skipped():
+            pytest.importorskip("hypothesis")
+
+        skipped.__name__ = fn.__name__
+        skipped.__doc__ = fn.__doc__
+        return skipped
+
+    return decorate
+
+
+def settings(*_args, **_kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+class _AnyStrategy:
+    """Stands in for ``hypothesis.strategies``; every attribute is callable."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()

@@ -2,8 +2,12 @@
 smaller mesh (the fleet fault-tolerance path)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -1,14 +1,19 @@
 """Heterogeneous trainer + gradient compression (straggler mitigation path)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core.device import DeviceGroup
+from repro.data import SyntheticTokens
 from repro.models import get_model
 from repro.models import params as P
 from repro.train import make_train_step, state_spec
@@ -27,6 +32,12 @@ def build():
 def batch_of(cfg, b=8, s=16, seed=0):
     rng = np.random.default_rng(seed)
     return {"tokens": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+
+
+# Same schedule the SPMD loss-decrease test uses: the default warmup (100
+# steps) keeps lr ~1e-5 over a 12-step test, far too small to observe
+# learning.
+LR = {"peak": 1e-3, "warmup": 5, "decay_steps": 10_000}
 
 
 def test_hetero_single_group_matches_spmd_step():
@@ -49,10 +60,12 @@ def test_hetero_multi_group_loss_decreases():
         DeviceGroup("fast", power=2.0),
         DeviceGroup("slow", power=1.0, sim_time_per_wi=2e-3),
     ]
-    trainer = HeteroTrainer(cfg, api, groups)
+    trainer = HeteroTrainer(cfg, api, groups, lr_kwargs=LR)
     losses = []
-    for i in range(12):
-        state, m = trainer.step(state, batch_of(cfg, seed=i))
+    # Learnable (Zipf-skewed) tokens, as in test_train: uniform-random data
+    # sits at the entropy floor and cannot show a decrease.
+    for _, batch in zip(range(16), SyntheticTokens(cfg, 8, 16, seed=3)):
+        state, m = trainer.step(state, batch)
         losses.append(m["loss"])
     assert np.mean(losses[-3:]) < np.mean(losses[:3])
 
@@ -110,9 +123,10 @@ def test_error_feedback_converges_in_mean():
 
 def test_compressed_training_still_learns():
     cfg, api, state = build()
-    trainer = HeteroTrainer(cfg, api, [DeviceGroup("a"), DeviceGroup("b")], compress=True)
+    trainer = HeteroTrainer(cfg, api, [DeviceGroup("a"), DeviceGroup("b")],
+                            compress=True, lr_kwargs=LR)
     losses = []
-    for i in range(12):
-        state, m = trainer.step(state, batch_of(cfg, seed=i))
+    for _, batch in zip(range(16), SyntheticTokens(cfg, 8, 16, seed=3)):
+        state, m = trainer.step(state, batch)
         losses.append(m["loss"])
     assert np.mean(losses[-3:]) < np.mean(losses[:3])
