@@ -7,10 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
   - fig11_efficiency : derived = mean efficiency per scheduler
   - async_submit     : derived = concurrent/sequential speedup on the
                        persistent runtime (Future-based submit())
+  - pipeline         : derived = waited-chain/pipelined speedup of a linked-
+                       buffer run graph (plus transfer-count ratio)
   - roofline         : derived = roofline fraction per (arch, shape) cell
 
-Also writes ``BENCH_coexec.json`` — machine-readable balance / efficiency /
-overhead so successive PRs have a perf trajectory to diff against.
+Also writes ``BENCH_coexec.json`` (balance / efficiency / overhead) and
+``BENCH_pipeline.json`` (pipelined vs. waited-chain wall-clock + transfer
+counts) so successive PRs have a perf trajectory to diff against.
 
 Fast mode (default) uses reduced iteration counts so the full suite runs in
 minutes on the CI container; ``--full`` reproduces the paper-scale settings.
@@ -116,6 +119,86 @@ def async_submit(rows: list[str], report: dict, n_programs: int = 4) -> None:
     }
 
 
+def pipeline_bench(rows: list[str], n_stages: int = 6, n: int = 1 << 20,
+                   reps: int = 3, json_path: str = "BENCH_pipeline.json") -> None:
+    """Dataflow run graphs vs. the pre-dataflow waited chain.
+
+    Both sides execute the same ``n_stages``-deep linked-buffer chain
+    (stage k+1 reads what stage k wrote).  The *waited* baseline reproduces
+    the old submission protocol: host-block after every stage and re-read
+    each intermediate from host memory (its per-chunk re-versioning made
+    every dependent stage a transfer-cache miss).  The *pipelined* side
+    submits the whole chain as a run graph and waits once; intermediates
+    hand off device-resident.  Emits ``BENCH_pipeline.json`` with wall-clock
+    and host<->device transfer counts for both."""
+    from repro.core import DeviceGroup, EngineCL, Program, Static
+
+    lws = 64
+
+    def kern(offset, a):
+        return a * np.float32(1.0001) + np.float32(0.5)
+
+    def make_chain():
+        bufs = [np.linspace(0.0, 1.0, n).astype(np.float32)]
+        progs = []
+        for _ in range(n_stages):
+            bufs.append(np.zeros(n, np.float32))
+            progs.append(
+                Program().in_(bufs[-2]).out(bufs[-1]).kernel(kern).work_items(n, lws)
+            )
+        return progs
+
+    def run_waited(eng):
+        for p in make_chain():
+            eng.program(p).run()
+            for b in p._outs:  # old protocol: per-chunk bump == downstream miss
+                p.invalidate(b)
+
+    def run_pipelined(eng):
+        eng.run_pipeline(*make_chain())
+
+    # One deterministic group per mode (handoff locality is exact, so the
+    # transfer counts are a property of the protocol, not of thread timing).
+    g_wait = DeviceGroup("waited")
+    g_pipe = DeviceGroup("pipelined")
+    eng_wait = EngineCL().use(g_wait).scheduler(Static())
+    eng_pipe = EngineCL().use(g_pipe).scheduler(Static())
+    run_waited(eng_wait)  # warm compile + workers (both engines share the
+    run_pipelined(eng_pipe)  # jitted kernel shape)
+    t_wait = min(_timed(run_waited, eng_wait) for _ in range(reps))
+    t_pipe = min(_timed(run_pipelined, eng_pipe) for _ in range(reps))
+
+    # Transfer count for ONE chain execution of each mode (fresh groups).
+    g_wait2, g_pipe2 = DeviceGroup("w2"), DeviceGroup("p2")
+    run_waited(EngineCL().use(g_wait2).scheduler(Static()))
+    run_pipelined(EngineCL().use(g_pipe2).scheduler(Static()))
+
+    speedup = t_wait / t_pipe if t_pipe > 0 else 0.0
+    rows.append(f"pipeline_speedup,{t_pipe * 1e6:.0f},{speedup:.2f}")
+    rows.append(
+        f"pipeline_transfers,{g_pipe2.n_transfers},"
+        f"{g_pipe2.n_transfers / max(1, g_wait2.n_transfers):.2f}"
+    )
+    out = {
+        "n_stages": n_stages,
+        "elements": n,
+        "waited_s": t_wait,
+        "pipelined_s": t_pipe,
+        "speedup": speedup,
+        "waited_transfers": g_wait2.n_transfers,
+        "pipelined_transfers": g_pipe2.n_transfers,
+        "pipelined_cache_hits": g_pipe2.n_cache_hits,
+    }
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
 def roofline(rows: list[str]) -> None:
     from pathlib import Path
 
@@ -137,10 +220,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
         "--tables", nargs="*",
-        default=["usability", "overhead", "coexec", "async", "roofline"],
+        default=["usability", "overhead", "coexec", "async", "pipeline", "roofline"],
     )
     ap.add_argument("--json", default="BENCH_coexec.json",
                     help="machine-readable balance/efficiency/overhead report")
+    ap.add_argument("--pipeline-json", default="BENCH_pipeline.json",
+                    help="machine-readable pipelined-vs-waited chain report")
     args = ap.parse_args()
 
     rows: list[str] = ["name,us_per_call,derived"]
@@ -153,6 +238,9 @@ def main() -> None:
         fig9_11_coexec(rows, report, target_seconds=2.0 if args.full else 0.75)
     if "async" in args.tables:
         async_submit(rows, report)
+    if "pipeline" in args.tables:
+        pipeline_bench(rows, reps=5 if args.full else 3,
+                       json_path=args.pipeline_json)
     if "roofline" in args.tables:
         roofline(rows)
     print("\n".join(rows))

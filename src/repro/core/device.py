@@ -20,6 +20,7 @@ from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.program import buffer_version
@@ -155,7 +156,14 @@ class DeviceGroup:
         r = program.buffer_ratio(host_buf)
         lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
         need = int(r * bucket) - (hi - lo)
-        version = buffer_version(host_buf)
+        # A buffer that is both input and output of the same Program
+        # (in-place update) is uncacheable: under run-scoped write versions a
+        # mid-run input slice would be keyed on the run's final version and
+        # could shadow the produced output for dependent runs.
+        if any(b is host_buf for b in program._outs):
+            version = None
+        else:
+            version = buffer_version(host_buf)
         # Keyed on element bounds (not work-items): a buffer shared between
         # programs of different gws can't alias a wrong slice.  The leading
         # id ties every entry to the buffer whose death evicts it.
@@ -166,6 +174,19 @@ class DeviceGroup:
                 with self._xfer_lock:
                     self.n_cache_hits += 1
                 return cached
+            if need > 0:
+                # Handoff probe: a producer run stashed this exact element
+                # range unpadded (need=0).  Padding happens device-side —
+                # no host re-read, no device_put.
+                base = self._cache_get(key[:4] + (0,))
+                if base is not None:
+                    with self._xfer_lock:
+                        self.n_cache_hits += 1
+                    dev = jnp.pad(
+                        base, [(0, need)] + [(0, 0)] * (base.ndim - 1)
+                    )
+                    self._cache_put(key, dev, host_buf)
+                    return dev
         b = host_buf[lo:hi]
         if need > 0:
             b = np.pad(np.asarray(b), [(0, need)] + [(0, 0)] * (b.ndim - 1))
@@ -175,6 +196,23 @@ class DeviceGroup:
         if key is not None:
             self._cache_put(key, dev, host_buf)
         return dev
+
+    def stash_output(self, program, host_buf, offset_wi: int, size_wi: int,
+                     dev_result, version: Optional[int]) -> None:
+        """Device-resident output handoff: seed the transfer cache with a
+        slice this group just produced, keyed under the producing run's
+        write ``version`` (``RunHandle.version_for_write``).  A dependent
+        run that reads the same element range on this group then serves the
+        still-on-device result instead of re-reading host memory and paying
+        a fresh ``jax.device_put``.  Bucket padding is trimmed device-side
+        (pad lanes hold garbage computed from padded inputs); consumers
+        re-pad with zeros on their own bucket geometry."""
+        if version is None or self._xfer_cache_entries <= 0:
+            return
+        r = program.buffer_ratio(host_buf)
+        lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
+        self._cache_put((id(host_buf), version, lo, hi, 0),
+                        dev_result[: hi - lo], host_buf)
 
     def execute_chunk(self, program, offset_wi: int, size_wi: int):
         """Run one package; returns device arrays (async, not blocked).

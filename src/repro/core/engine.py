@@ -33,7 +33,7 @@ import jax
 from repro.core.device import DeviceGroup
 from repro.core.introspector import Introspector
 from repro.core.program import Program
-from repro.core.runtime import RunHandle, Runtime
+from repro.core.runtime import RunHandle, Runtime, conflicts
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
 
@@ -129,7 +129,10 @@ class EngineCL:
         if not self._groups:
             self._groups = discover(DeviceMask.ALL)
         sig = tuple(id(g) for g in self._groups)
-        if self._runtime is None or self._runtime_sig != sig:
+        # Safe to call after shutdown() — including a shutdown issued on the
+        # Runtime directly: a dead executor is replaced, never submitted to.
+        if (self._runtime is None or self._runtime_sig != sig
+                or not self._runtime.alive):
             if self._runtime is not None:
                 self._runtime.shutdown()
             self._runtime = Runtime(self._groups, pipeline_depth=self._pipeline_depth)
@@ -150,12 +153,18 @@ class EngineCL:
         self.shutdown()
 
     # ------------------------------------------------------------ async API
-    def submit(self, program: Optional[Program] = None) -> RunHandle:
+    def submit(self, program: Optional[Program] = None, *,
+               after=None, epilogue=None) -> RunHandle:
         """Enqueue a run on the persistent workers; non-blocking.
 
         Multiple Programs may be in flight; each handle carries its own
-        errors/metrics.  Programs sharing host buffers must be serialized by
-        the caller (wait one handle before submitting the dependent run)."""
+        errors/metrics.  Runs are ordered by the run graph: explicit
+        ``after=`` handles, ``Program.reads_from`` links, and conflicts
+        inferred from shared host buffers against in-flight runs — the
+        dependency wait happens on the worker threads, never here.  Note
+        that inference only sees runs still in flight: when ordering against
+        a run that may complete (or fail) before this submit lands, pass its
+        handle via ``after=`` so failure poisoning stays deterministic."""
         prog = program if program is not None else self._program
         if prog is None:
             raise ValueError("no program set")
@@ -163,7 +172,9 @@ class EngineCL:
             prog.gws = self._gws
         if self._lws is not None:
             prog.lws = self._lws
-        handle = self._ensure_runtime().submit(prog, self._scheduler)
+        handle = self._ensure_runtime().submit(
+            prog, self._scheduler, after=after, epilogue=epilogue
+        )
         # The newest run supersedes stale engine-level error state; the
         # engine's error API now tracks this (possibly in-flight) handle.
         self._engine_errors = []
@@ -180,36 +191,89 @@ class EngineCL:
         self.submit().wait()
         return self
 
-    # ---- paper §10 future work: multi-kernel & iterative execution ------
-    def run_pipeline(self, *programs: Program) -> "EngineCL":
-        """Run several Programs back-to-back (multi-kernel execution).
+    # ---- paper §10, implemented: multi-kernel & iterative dataflow ------
+    def submit_pipeline(self, *programs: Program) -> List[RunHandle]:
+        """Submit several linked Programs as one dependency chain;
+        non-blocking — returns every stage's handle immediately.
 
-        Programs share host buffers by construction (pass one program's out
-        array as the next one's in_) — the paper's 'linked buffers' idea —
-        so each submit is waited before the dependent one is enqueued."""
+        Stages share host buffers by construction (pass one program's out
+        array as the next one's in_) — the paper's 'linked buffers' idea.
+        Dependencies between the stages are computed here, statically, from
+        the declared buffer sets (plus ``reads_from`` links) and passed as
+        explicit ``after=`` edges: ordering and failure poisoning are
+        deterministic even when an early stage fails before a later submit.
+        Independent stages share no edge and pipeline freely across the
+        groups' worker queues; the host never blocks between stages."""
+        handles: List[RunHandle] = []
         for p in programs:
-            self.program(p).run()
-            if self.has_errors():
-                break
+            reads = frozenset(map(id, p._ins))
+            writes = frozenset(map(id, p._outs))
+            linked = set(map(id, p._linked))
+            after = [
+                h for h in handles
+                if h.program is p or id(h.program) in linked
+                or conflicts(reads, writes, h)
+            ]
+            handles.append(self.submit(p, after=after))
+        return handles
+
+    def run_pipeline(self, *programs: Program) -> "EngineCL":
+        """Blocking multi-kernel execution: ``submit_pipeline`` + wait.
+
+        Unlike the pre-dataflow engine this does not host-block between
+        dependent runs — each group's worker starts its part of stage N+1
+        the moment stage N is safe for it, and intermediate buffers hand
+        off device-resident through the transfer cache."""
+        handles = self.submit_pipeline(*programs)
+        for h in handles:
+            h.wait()
+        if handles:
+            # Engine-level error API covers the whole chain: errors of every
+            # stage but the last (the last is _last_handle, already read by
+            # get_errors); poisoned stages carry their upstream cause.
+            self._engine_errors = [e for h in handles[:-1] for e in h.errors()]
         return self
 
-    def run_iterative(self, n_iters: int, swap: Optional[Sequence[tuple]] = None) -> "EngineCL":
-        """Iterative kernels (e.g. NBody steps): re-run the current program
-        ``n_iters`` times on the resident workers; ``swap`` lists
-        (in_index, out_index) buffer pairs ping-ponged between iterations.
-        Unswapped input buffers stay in the per-group transfer cache, so
-        iterations re-transfer only what actually changed."""
+    def submit_iterative(self, n_iters: int,
+                         swap: Optional[Sequence[tuple]] = None) -> List[RunHandle]:
+        """Submit ``n_iters`` runs of the current program as a dependency
+        chain; non-blocking.  ``swap`` pairs are ping-ponged *on the worker*
+        (each run's epilogue) the moment that run completes — not on the
+        host — so iteration N+1 starts without a host round-trip and the
+        just-produced outputs hand off device-resident."""
         prog = self._program
         if prog is None:
+            raise ValueError("no program set")
+        swap = tuple(swap) if swap else ()
+
+        def epilogue(p=prog, sw=swap):
+            for i_in, i_out in sw:
+                p.swap_buffers(i_in, i_out)
+
+        handles: List[RunHandle] = []
+        for _ in range(n_iters):
+            handles.append(self.submit(
+                prog,
+                after=handles[-1:],  # same program: always a chain
+                epilogue=epilogue if swap else None,
+            ))
+        return handles
+
+    def run_iterative(self, n_iters: int, swap: Optional[Sequence[tuple]] = None) -> "EngineCL":
+        """Iterative kernels (e.g. NBody steps): blocking
+        ``submit_iterative`` + wait.  ``swap`` lists (in_index, out_index)
+        buffer pairs ping-ponged between iterations.  Swapped-in outputs are
+        served from the per-group transfer cache (device-resident handoff);
+        unswapped inputs stay cached too, so iterations re-transfer only
+        what actually changed."""
+        if self._program is None:
             self._engine_errors = ["no program set"]
             return self
-        for _ in range(n_iters):
-            self.run()
-            if self.has_errors():
-                break
-            if swap:
-                for i_in, i_out in swap:
-                    prog.swap_buffers(i_in, i_out)
+        handles = self.submit_iterative(n_iters, swap)
+        for h in handles:
+            h.wait()
+        if handles:
+            self._engine_errors = [e for h in handles[:-1] for e in h.errors()]
         return self
 
     # --------------------------------------------------------------- errors

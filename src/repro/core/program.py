@@ -75,6 +75,7 @@ class Program:
     def __init__(self) -> None:
         self._ins: list[Any] = []
         self._outs: list[Any] = []
+        self._linked: list["Program"] = []
         self._kernel: Optional[Callable] = None
         self._kernel_name: str = "kernel"
         self._args: list[Any] = []
@@ -106,6 +107,30 @@ class Program:
         self._kernel = fn
         self._kernel_name = name
         return self
+
+    # -- dataflow links ---------------------------------------------------
+    def reads_from(self, *producers: "Program") -> "Program":
+        """Declare upstream producers (the paper's linked buffers, §10).
+
+        Submitting this Program orders it after any in-flight run of the
+        named producers, even when the shared-buffer conflict cannot be
+        inferred (e.g. the producer swaps in a new buffer mid-flight)."""
+        self._linked.extend(producers)
+        return self
+
+    @property
+    def linked(self) -> tuple:
+        return tuple(self._linked)
+
+    @property
+    def reads(self) -> tuple:
+        """Declared read set: the host buffers this Program's kernel consumes."""
+        return tuple(self._ins)
+
+    @property
+    def writes(self) -> tuple:
+        """Declared write set: the host buffers this Program's kernel produces."""
+        return tuple(self._outs)
 
     def args(self, *args) -> "Program":
         self._args = list(args)
@@ -159,7 +184,16 @@ class Program:
             out.append(b[lo:hi])
         return out
 
-    def write_outputs(self, offset_wi: int, size_wi: int, results: Sequence) -> None:
+    def write_outputs(self, offset_wi: int, size_wi: int, results: Sequence,
+                      *, bump: bool = True) -> None:
+        """Write one package's results back to the host output buffers.
+
+        ``bump=True`` (the default, tier-1 semantics) re-versions each buffer
+        per call.  The runtime passes ``bump=False`` and assigns ONE fresh
+        version per (run, buffer) instead (``RunHandle.version_for_write``),
+        so every chunk a run produces shares a single coherent version — the
+        precondition for serving still-on-device output slices to dependent
+        runs from the transfer cache."""
         if not isinstance(results, (tuple, list)):
             results = (results,)
         if len(results) != len(self._outs):
@@ -170,18 +204,23 @@ class Program:
             r = self.buffer_ratio(b)
             lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
             b[lo:hi] = np.asarray(res)[: hi - lo]  # trim bucket padding
-            bump_version(b)  # output changed: stale any cached device copy
+            if bump:
+                bump_version(b)  # output changed: stale any cached device copy
 
     def swap_buffers(self, i_in: int, i_out: int) -> None:
         """Ping-pong one (input, output) buffer pair between iterations.
 
         The just-written output becomes the next iteration's input; the old
         input is copied so the kernel keeps a writable, contiguous output.
-        Versions are bumped so the transfer cache can't serve stale slices."""
+        The swapped-in buffer's version is NOT bumped: its contents are
+        exactly what the producing run wrote (and already re-versioned), so
+        still-on-device result slices stay servable from the transfer cache —
+        iterative chains hand buffers off device-resident instead of
+        re-uploading.  The fresh output copy is a new array the cache has
+        never seen; bumping it is a defensive no-op."""
         new_in = self._outs[i_out]
         new_out = np.ascontiguousarray(self._ins[i_in])
         self._ins[i_in], self._outs[i_out] = new_in, new_out
-        bump_version(new_in)
         bump_version(new_out)
 
     def invalidate(self, buf=None) -> None:

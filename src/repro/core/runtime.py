@@ -1,4 +1,4 @@
-"""Persistent asynchronous runtime (Tier-2; see DESIGN.md).
+"""Persistent asynchronous runtime with dataflow run graphs (Tier-2).
 
 The paper's headline overhead result (≤2.8% vs. native OpenCL) relies on a
 *resident* multi-threaded runtime: device threads and queues live across
@@ -6,18 +6,27 @@ kernel launches.  This module is that runtime for the JAX port:
 
 - ``GroupExecutor`` — one long-lived daemon thread per ``DeviceGroup``
   draining a FIFO job queue, so repeated runs/steps never pay thread spawn.
+  ``submit_batch`` enqueues a job set atomically with respect to
+  ``shutdown()``; post-shutdown submits raise deterministically.
 - ``RunHandle``    — future-like per-run state: completion event, a private
-  ``Introspector``, and a lock-protected error list (concurrent runs cannot
-  clobber each other's errors).
-- ``Runtime``      — ``submit(program, scheduler) -> RunHandle``.  The
-  engine's scheduler is ``clone()``d per run so scheduler bookkeeping is
-  run-scoped; every group worker then pulls packages from the clone until
-  the run is exhausted.
+  ``Introspector``, a lock-protected error list, and the run's *graph*
+  edges: predecessor handles, run-scoped buffer write versions, and an
+  optional epilogue (e.g. iterative buffer ping-pong) executed on the last
+  worker before the handle completes.
+- ``Runtime``      — ``submit(program, scheduler, after=...) -> RunHandle``.
+  Predecessors are taken from ``after=``, from ``Program.reads_from`` links,
+  and *inferred* from shared host buffers (read-after-write,
+  write-after-write, write-after-read on buffer identity).  Dependent runs
+  wait on their predecessors **on the worker threads**, never on the host:
+  a group's persistent worker starts its portion of run N+1 the moment run
+  N is safe for it, so chains of linked Programs pipeline without a host
+  barrier per stage.  A failed predecessor *poisons* dependents — they
+  complete immediately with a ``RunError`` instead of running on stale
+  inputs (or hanging).
 
 ``EngineCL`` is a facade over this: ``run()`` = ``submit()`` + wait, with
-identical blocking semantics; ``submit()`` lets several Programs be in
-flight on the same persistent workers (each group processes queued runs in
-submission order, pipelining across runs).
+identical blocking semantics; ``run_pipeline``/``run_iterative`` submit
+whole dependency chains and wait once at the end.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ import jax
 
 from repro.core.device import DeviceGroup
 from repro.core.introspector import Introspector, PackageRecord
-from repro.core.program import Program
+from repro.core.program import Program, buffer_version, bump_version
 from repro.core.scheduler.base import Scheduler
 
 
@@ -44,10 +53,12 @@ class RunError(RuntimeError):
 
 
 class RunHandle:
-    """Future-like handle for one submitted run."""
+    """Future-like handle for one submitted run (a node in the run graph)."""
 
     def __init__(self, program: Program, scheduler: Scheduler, n_workers: int,
-                 introspector: Optional[Introspector] = None) -> None:
+                 introspector: Optional[Introspector] = None,
+                 deps: Sequence["RunHandle"] = (),
+                 epilogue: Optional[Callable[[], None]] = None) -> None:
         self.program = program
         self.scheduler = scheduler
         self.introspector = introspector or Introspector()
@@ -56,6 +67,20 @@ class RunHandle:
         self._pending_workers = n_workers
         self._started = False
         self._done = threading.Event()
+        # -- run graph state ----------------------------------------------
+        self.deps = tuple(deps)
+        self._epilogue = epilogue
+        self._poisoned = False
+        self._prepared = False
+        self._prepare_done = threading.Event()
+        # One fresh version per (run, buffer) — see version_for_write.
+        self._write_versions: dict[int, Optional[int]] = {}
+        # Submit-time snapshot of the buffer sets, used by later submits to
+        # infer conflicts.  Programs that mutate their buffer lists while in
+        # flight (swap_buffers epilogues) are still handled conservatively:
+        # same-Program submits always conflict.
+        self.read_ids = frozenset(map(id, program._ins))
+        self.write_ids = frozenset(map(id, program._outs))
 
     # -- worker-facing -----------------------------------------------------
     def _mark_started(self) -> None:
@@ -67,16 +92,72 @@ class RunHandle:
             self._started = True
         self.introspector.start_run()
 
+    def _ensure_prepared(self, groups) -> None:
+        """Per-run ``prepare`` ordering: the scheduler clone is prepared by
+        the first worker that actually starts the run — not at submit time —
+        so queued runs of a dependency chain read geometry/powers when they
+        begin, and every worker observes a fully-prepared scheduler before
+        its first ``next_package``."""
+        with self._lock:
+            first = not self._prepared
+            self._prepared = True
+        if first:
+            try:
+                self.scheduler.prepare(
+                    self.program.n_work_groups, self.program.lws, groups
+                )
+            finally:
+                self._prepare_done.set()
+        else:
+            self._prepare_done.wait()
+
+    def version_for_write(self, buf) -> Optional[int]:
+        """Run-scoped write version: the first chunk written to ``buf`` in
+        this run bumps its version once; every later chunk of the same run
+        shares it.  All device-resident output slices a run stashes are
+        therefore keyed on one coherent version — the one a dependent run
+        will look up."""
+        key = id(buf)
+        # Bump-and-read under the handle lock: two groups writing the same
+        # buffer concurrently must agree on ONE version, or every stash of
+        # this run would be orphaned under a superseded token.  Lock order
+        # (handle lock -> version-table lock) is acyclic: the version table
+        # never calls back into handles.
+        with self._lock:
+            if key not in self._write_versions:
+                bump_version(buf)
+                self._write_versions[key] = buffer_version(buf)
+            return self._write_versions[key]
+
     def record_error(self, msg: str) -> None:
         with self._lock:
             self._errors.append(msg)
+
+    def _poison(self) -> None:
+        """Mark this run as skipped due to an upstream failure (record the
+        poison error once, however many workers observe it)."""
+        with self._lock:
+            if self._poisoned:
+                return
+            self._poisoned = True
+        ups = [e.splitlines()[0] for d in self.deps if d.has_errors()
+               for e in d.errors()[:1]]
+        self.record_error(
+            "poisoned: upstream run failed (" + "; ".join(ups) + ")"
+        )
 
     def _worker_finished(self) -> None:
         with self._lock:
             self._pending_workers -= 1
             last = self._pending_workers <= 0
         if last:
-            self.introspector.end_run()
+            if self._epilogue is not None and not self.has_errors():
+                try:
+                    self._epilogue()
+                except BaseException:  # noqa: BLE001 — must surface, not hang
+                    self.record_error(f"epilogue: {traceback.format_exc()}")
+            if self._started:
+                self.introspector.end_run()
             self._done.set()
 
     def _fail(self, msgs: Sequence[str]) -> None:
@@ -115,6 +196,13 @@ class RunHandle:
         return self.introspector.summary()
 
 
+def conflicts(reads: frozenset, writes: frozenset, other: RunHandle) -> bool:
+    """True when a run reading ``reads``/writing ``writes`` (host-buffer ids)
+    must be ordered after ``other``: read-after-write, write-after-write, or
+    write-after-read on any shared host buffer."""
+    return bool((reads | writes) & other.write_ids) or bool(writes & other.read_ids)
+
+
 class GroupExecutor:
     """One persistent worker thread per DeviceGroup, FIFO job order.
 
@@ -126,6 +214,7 @@ class GroupExecutor:
         self.groups = list(groups)
         self._queues: dict[int, "queue.Queue"] = {}
         self._threads: List[threading.Thread] = []
+        self._lock = threading.Lock()  # guards _alive vs. enqueue atomically
         self._alive = True
         for i, g in enumerate(self.groups):
             q: "queue.Queue" = queue.Queue()
@@ -151,18 +240,33 @@ class GroupExecutor:
                 if on_done is not None:
                     on_done()
 
+    @property
+    def alive(self) -> bool:
+        with self._lock:
+            return self._alive
+
     def submit(self, group: DeviceGroup, fn: Callable[[], None],
                on_done: Optional[Callable[[], None]] = None) -> None:
-        if not self._alive:
-            raise RuntimeError("executor is shut down")
-        self._queues[id(group)].put((fn, on_done))
+        self.submit_batch([(group, fn, on_done)])
+
+    def submit_batch(self, jobs: Sequence[tuple]) -> None:
+        """Atomically enqueue ``(group, fn, on_done)`` jobs: either every job
+        lands before any shutdown sentinel, or none does and this raises.
+        Without the lock a submit racing ``shutdown()`` could slip a job in
+        after the ``None`` sentinel and silently never run."""
+        with self._lock:
+            if not self._alive:
+                raise RuntimeError("executor is shut down")
+            for group, fn, on_done in jobs:
+                self._queues[id(group)].put((fn, on_done))
 
     def shutdown(self) -> None:
-        if not self._alive:
-            return
-        self._alive = False
-        for q in self._queues.values():
-            q.put(None)  # after queued jobs: workers drain, then exit
+        with self._lock:
+            if not self._alive:
+                return
+            self._alive = False
+            for q in self._queues.values():
+                q.put(None)  # after queued jobs: workers drain, then exit
 
     def __del__(self) -> None:  # best-effort: release threads with the owner
         try:
@@ -172,7 +276,7 @@ class GroupExecutor:
 
 
 class Runtime:
-    """Resident execution core: persistent dispatcher threads + run queue."""
+    """Resident execution core: persistent dispatcher threads + run graph."""
 
     def __init__(self, groups: Sequence[DeviceGroup], *, pipeline_depth: int = 2) -> None:
         if not groups:
@@ -181,40 +285,92 @@ class Runtime:
         self.pipeline_depth = max(1, pipeline_depth)
         self.executor = GroupExecutor(self.groups)
         self._submit_lock = threading.Lock()
+        self._inflight: List[RunHandle] = []
+
+    @property
+    def alive(self) -> bool:
+        return self.executor.alive
 
     # ---------------------------------------------------------------- submit
-    def submit(self, program: Program, scheduler: Scheduler) -> RunHandle:
+    def submit(self, program: Program, scheduler: Scheduler, *,
+               after: Optional[Sequence[RunHandle]] = None,
+               epilogue: Optional[Callable[[], None]] = None) -> RunHandle:
         """Enqueue one run on the persistent workers; returns immediately.
 
-        Validation errors complete the handle immediately (``result()``
-        raises ``RunError``).  Runs are processed per group in submission
-        order; distinct groups may be in different runs at the same time, so
-        Programs sharing host buffers must be submitted-and-waited serially
-        (``run_pipeline`` does)."""
-        handle = RunHandle(program, scheduler.clone(), len(self.groups))
-        errs = program.validate()
-        if errs:
-            handle._fail(errs)
-            return handle
-        handle.scheduler.prepare(program.n_work_groups, program.lws, self.groups)
+        The run is ordered after (a) every handle in ``after=``, (b) any
+        in-flight run of a Program this one ``reads_from``, and (c) any
+        in-flight run whose submit-time buffer sets conflict with this one's
+        (shared host buffers).  Dependency waits happen on the group worker
+        threads — the host never blocks — and an upstream failure poisons
+        this handle instead of executing on stale data.
+
+        ``epilogue`` (if given) runs exactly once on the last worker after a
+        successful run, before the handle completes — dependents observe its
+        effects (e.g. ``swap_buffers``).  Validation errors complete the
+        handle immediately (``result()`` raises ``RunError``)."""
+        deps: List[RunHandle] = []
+        if after is not None:
+            deps.extend([after] if isinstance(after, RunHandle) else list(after))
+        reads = frozenset(map(id, program._ins))
+        writes = frozenset(map(id, program._outs))
+        linked = set(map(id, program._linked))
         with self._submit_lock:  # same run order in every group's queue
-            for g in self.groups:
-                self.executor.submit(
-                    g,
-                    lambda g=g, h=handle: self._process(g, h),
-                    on_done=handle._worker_finished,
-                )
+            self._inflight = [h for h in self._inflight if not h.done()]
+            # Newest-first: a same-program predecessor transitively orders
+            # all older same-program runs (each submit chained to the then-
+            # newest), so one edge suffices — long iterative chains stay
+            # O(N) edges, not O(N^2).
+            same_program_covered = any(h.program is program for h in deps)
+            for h in reversed(self._inflight):
+                if h in deps:
+                    continue
+                if h.program is program:
+                    if same_program_covered:
+                        continue
+                    same_program_covered = True
+                    deps.append(h)
+                elif id(h.program) in linked or conflicts(reads, writes, h):
+                    deps.append(h)
+            handle = RunHandle(program, scheduler.clone(), len(self.groups),
+                               deps=deps, epilogue=epilogue)
+            errs = program.validate()
+            if errs:
+                handle._fail(errs)
+                return handle
+            self.executor.submit_batch([
+                (g, (lambda g=g, h=handle: self._process(g, h)), handle._worker_finished)
+                for g in self.groups
+            ])
+            self._inflight.append(handle)
         return handle
 
     def shutdown(self) -> None:
         self.executor.shutdown()
 
     # --------------------------------------------------------------- workers
+    def _await_deps(self, handle: RunHandle) -> bool:
+        """Block this worker until every predecessor run completed; returns
+        False (poisoning the handle) when any predecessor failed.  Safe from
+        deadlock: dependencies always precede their dependents in every
+        group's FIFO queue (submit order), and cross-group progress is
+        independent."""
+        ok = True
+        for dep in handle.deps:
+            dep._done.wait()
+            if dep.has_errors():
+                ok = False
+        if not ok:
+            handle._poison()
+        return ok
+
     def _process(self, group: DeviceGroup, handle: RunHandle) -> None:
         """Paper's Device thread body: pull → enqueue (async) → complete →
         write, against this run's scheduler/introspector/error list."""
         prog, sched = handle.program, handle.scheduler
+        if not self._await_deps(handle):
+            return
         handle._mark_started()
+        handle._ensure_prepared(self.groups)
         pending: list = []  # (offset, size, result, t_enqueue)
         try:
             while True:
@@ -231,20 +387,35 @@ class Runtime:
                 # overlap with this wait.
                 if pending and (len(pending) >= self.pipeline_depth or pkg is None):
                     off, size, res, t_enq = pending.pop(0)
-                    t_start = t_enq  # async: service time measured to completion
-                    jax.block_until_ready(res)
-                    t_end = time.perf_counter()
+                    jax.block_until_ready(res)  # async: service time to completion
+                    t_dev = time.perf_counter()
                     cost = prog.cost_fn(off, size) if prog.cost_fn else None
-                    group.simulate_service_time(size, t_end - t_start, cost)
+                    group.simulate_service_time(size, t_dev - t_enq, cost)
                     t_end = time.perf_counter()
-                    prog.write_outputs(off, size, res)
+                    # Device service time (plus simulated padding), measured
+                    # ONCE — host write-back below must not inflate what
+                    # adaptive raters (HGuided/ThroughputRater) observe.
+                    service = t_end - t_enq
+                    self._write_back(group, handle, off, size, res)
                     handle.introspector.record(
-                        PackageRecord(group.name, off, size, t_enq, t_start, t_end)
+                        PackageRecord(group.name, off, size, t_enq, t_enq, t_end)
                     )
-                    sched.observe(group, size, t_end - t_start)
+                    sched.observe(group, size, service)
         except BaseException:  # noqa: BLE001 — surfaced via RunHandle error
             # API.  BaseException, not Exception: a KeyboardInterrupt/
             # SystemExit escaping from kernel code must still be recorded
             # (else the handle completes "successfully" with zeroed outputs)
             # and must not kill the resident worker thread.
             handle.record_error(f"{group.name}: {traceback.format_exc()}")
+
+    def _write_back(self, group: DeviceGroup, handle: RunHandle,
+                    off: int, size: int, res) -> None:
+        """Host write-back + device-resident handoff: the produced device
+        slices are stashed in this group's transfer cache under the run's
+        write version, so a dependent run reading the same elements on the
+        same group skips the host re-read and the ``jax.device_put``."""
+        prog = handle.program
+        results = res if isinstance(res, (tuple, list)) else (res,)
+        prog.write_outputs(off, size, results, bump=False)
+        for b, r in zip(prog._outs, results):
+            group.stash_output(prog, b, off, size, r, handle.version_for_write(b))

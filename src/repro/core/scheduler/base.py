@@ -31,6 +31,14 @@ class Scheduler:
 
     # -- lifecycle ---------------------------------------------------------
     def prepare(self, total_groups: int, lws: int, devices) -> None:
+        """Arm the scheduler for one run.
+
+        Since the dataflow-submission refactor this is called by the *first
+        worker that starts the run* (``RunHandle._ensure_prepared``), not at
+        submit time: a run queued behind its dependency chain reads geometry
+        and (adaptive) device powers when it actually begins.  Callers must
+        not invoke ``next_package`` before ``prepare`` returns; before then
+        the package stream reads as exhausted (``_remaining == 0``)."""
         with self._lock:
             self._remaining = total_groups
             self._next_group = 0
@@ -59,7 +67,13 @@ class Scheduler:
 
     # -- adaptive powers ----------------------------------------------------
     def observe(self, device, size_wi: int, seconds: float) -> None:
-        """Optional feedback after each completed package (adaptive)."""
+        """Optional feedback after each completed package (adaptive).
+
+        ``seconds`` is the package's *device service time* — dispatch to
+        completion, including simulated-heterogeneity padding but excluding
+        host write-back.  Feeding write-back time here would skew
+        ``HGuided(adaptive=True)``/``ThroughputRater`` against groups whose
+        packages happen to be written back on slower host paths."""
 
     @property
     def total_power(self) -> float:

@@ -22,22 +22,20 @@ from repro.core import DeviceGroup, Dynamic, EngineCL, HGuided, Program, Static
 from repro.launch.specs import make_batch
 from repro.models import get_model
 from repro.models.params import materialize
-from repro.serve import make_decode_step, make_prefill_step
+from repro.serve import make_decode_chain, make_prefill_step
 from repro.configs.base import ShapeCell
 
 
 def generate(cfg, api, params, batch, gen: int):
-    """Plain batched generate: prefill then greedy decode."""
+    """Plain batched generate: prefill, then a device-resident decode chain
+    (no host sync per token — serve.make_decode_chain)."""
     b, s = batch["tokens"].shape
     cache = materialize(api.cache_spec(cfg, b, s + gen, 1), jax.random.PRNGKey(0), jnp.float32)
     prefill = jax.jit(make_prefill_step(cfg, api))
-    decode = jax.jit(make_decode_step(cfg, api), donate_argnums=(1,))
+    chain = jax.jit(make_decode_chain(cfg, api), static_argnums=(4,), donate_argnums=(1,))
     tok, cache = prefill(params, batch, cache)
-    out = [tok]
-    for i in range(gen - 1):
-        tok, cache = decode(params, cache, tok, jnp.int32(s + i))
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    toks, _, _ = chain(params, cache, tok, jnp.int32(s), gen - 1)
+    return jnp.concatenate([tok, toks], axis=1)
 
 
 def main() -> None:
@@ -74,9 +72,10 @@ def main() -> None:
         b = {"tokens": tokens, **dict(zip(extra.keys(), extras))}
         return generate_jitless(cfg, api, params, b, args.gen)
 
-    # One jit-able request-chunk kernel (prefill+decode rolled via scan).
+    # One jit-able request-chunk kernel (prefill + device-resident decode
+    # chain — serve.make_decode_chain, shared with the plain path).
     prefill = make_prefill_step(cfg, api)
-    decode = make_decode_step(cfg, api)
+    chain = make_decode_chain(cfg, api)
 
     def generate_jitless(cfg, api, params, b, gen):
         bsz, s = b["tokens"].shape
@@ -87,14 +86,8 @@ def main() -> None:
             abstract(api.cache_spec(cfg, bsz, s + gen, 1), jnp.dtype(cfg.compute_dtype)),
         )
         tok, cache = prefill(params, b, cache)
-
-        def body(carry, i):
-            tok, cache = carry
-            tok, cache = decode(params, cache, tok, s + i)
-            return (tok, cache), tok
-
-        (_, _), toks = jax.lax.scan(body, (tok, cache), jnp.arange(gen - 1))
-        return jnp.concatenate([tok[None], toks], 0).transpose(1, 0, 2)[..., 0]
+        toks, _, _ = chain(params, cache, tok, s, gen - 1)
+        return jnp.concatenate([tok, toks], axis=1)
 
     out = np.zeros((args.requests, args.gen), np.int32)
     groups = [

@@ -1,1 +1,5 @@
-from repro.serve.step import make_decode_step, make_prefill_step  # noqa: F401
+from repro.serve.step import (  # noqa: F401
+    make_decode_chain,
+    make_decode_step,
+    make_prefill_step,
+)

@@ -1,4 +1,6 @@
-"""Serving steps: prefill (prompt → cache) and decode (one token, KV cache).
+"""Serving steps: prefill (prompt → cache), decode (one token, KV cache),
+and decode *chains* (N dependent tokens, device-resident — the serving
+analog of the runtime's dataflow run graphs).
 
 ``decode_*`` / ``long_*`` dry-run cells lower make_decode_step — one new
 token against a seq_len-deep cache — per the assignment.
@@ -75,3 +77,27 @@ def make_decode_step(cfg, api):
         return next_tok, cache
 
     return decode_step
+
+
+def make_decode_chain(cfg, api):
+    """Multi-step greedy decode with device-resident handoff — the serving
+    analog of the runtime's dataflow run graphs: ``n_steps`` dependent
+    decode steps are rolled into one ``lax.scan``, so tokens and KV cache
+    flow step-to-step on device with no host synchronization (or transfer)
+    per token.  ``decode_chain(params, cache, token, pos, n_steps)`` returns
+    ``(tokens[b, n_steps], last_token, cache)``; jit with
+    ``static_argnums=(4,)``."""
+    decode = make_decode_step(cfg, api)
+
+    def decode_chain(params, cache, token, pos, n_steps: int):
+        def body(carry, i):
+            tok, cache = carry
+            tok, cache = decode(params, cache, tok, pos + i)
+            return (tok, cache), tok
+
+        (tok, cache), toks = jax.lax.scan(
+            body, (token, cache), jnp.arange(n_steps)
+        )
+        return jnp.swapaxes(toks[..., 0], 0, 1), tok, cache
+
+    return decode_chain

@@ -72,15 +72,20 @@ class HeteroTrainer:
         return shares.tolist()
 
     # ------------------------------------------------------------------ step
-    def step(self, state: dict, batch: dict) -> tuple[dict, dict]:
+    def submit_step(self, state: dict, batch: dict) -> "StepHandle":
+        """Enqueue this step's per-group gradient jobs; non-blocking.
+
+        The same graph path the runtime uses for linked Programs, at step
+        granularity: shares are submitted atomically to the persistent
+        per-group workers (``GroupExecutor.submit_batch``) and a future-like
+        ``StepHandle`` is returned.  ``.result()`` blocks and performs the
+        host-side combine + AdamW — until then the host is free (multi-step
+        chains overlap next-batch preparation with this step's device
+        work)."""
         bsz = batch["tokens"].shape[0]
         shares = self.partition(bsz)
         offsets = np.concatenate([[0], np.cumsum(shares)]).astype(int)
-        results: dict[int, tuple] = {}
-        errors: list[str] = []
-        lock = threading.Lock()
-        done = threading.Event()
-        pending = len(self.groups)
+        handle = StepHandle(self, state, shares, n_workers=len(self.groups))
 
         def worker(i: int, group: DeviceGroup) -> None:
             try:
@@ -95,30 +100,30 @@ class HeteroTrainer:
                 dt = max(time.perf_counter() - t0, 1e-9)
                 if self.compress:
                     grads = decompress_tree(self._ef[id(group)].compress(grads))
-                with lock:
-                    results[i] = (float(loss), grads, hi - lo, dt)
+                with handle._lock:
+                    handle._results[i] = (float(loss), grads, hi - lo, dt)
             except BaseException as e:  # noqa: BLE001 — even SystemExit/
                 # KeyboardInterrupt must surface as a step error: the
                 # executor swallows escapees, and a silently missing share
                 # would renormalize into a wrong gradient.
-                with lock:
-                    errors.append(f"{group.name}: {e!r}")
+                with handle._lock:
+                    handle._errors.append(f"{group.name}: {e!r}")
 
-        def finished() -> None:
-            nonlocal pending
-            with lock:
-                pending -= 1
-                last = pending == 0
-            if last:
-                done.set()
+        # Persistent per-group workers, enqueued atomically w.r.t. shutdown:
+        # steps never spawn threads, and a raced shutdown() cannot strand a
+        # partially-submitted step (it raises here instead).
+        self._executor.submit_batch([
+            (g, (lambda i=i, g=g: worker(i, g)), handle._worker_finished)
+            for i, g in enumerate(self.groups)
+        ])
+        return handle
 
-        # Persistent per-group workers: steps enqueue shares, never spawn.
-        for i, g in enumerate(self.groups):
-            self._executor.submit(g, lambda i=i, g=g: worker(i, g), on_done=finished)
-        done.wait()
-        if errors:
-            raise RuntimeError("; ".join(errors))
+    def step(self, state: dict, batch: dict) -> tuple[dict, dict]:
+        """Blocking step: ``submit_step`` + combine (semantics unchanged)."""
+        return self.submit_step(state, batch).result()
 
+    def _combine(self, state: dict, shares: list,
+                 results: dict[int, tuple]) -> tuple[dict, dict]:
         # Weighted combine by actual sequence counts (host-side cross-group
         # reduction — the DCN/elastic path; in-pod reduction stays in XLA).
         total = sum(r[2] for r in results.values())
@@ -144,3 +149,48 @@ class HeteroTrainer:
             "powers": [self.rater.power(id(g)) for g in self.groups],
         }
         return new_state, metrics
+
+
+class StepHandle:
+    """Future-like handle for one in-flight training step (mirrors the
+    runtime's ``RunHandle``: completion event + lock-protected errors)."""
+
+    def __init__(self, trainer: HeteroTrainer, state: dict, shares: list,
+                 n_workers: int) -> None:
+        self._trainer = trainer
+        self._state = state
+        self._shares = shares
+        self._lock = threading.Lock()
+        self._results: dict[int, tuple] = {}
+        self._errors: list[str] = []
+        self._pending = n_workers
+        self._done = threading.Event()
+        self._combined: Optional[tuple] = None
+
+    def _worker_finished(self) -> None:
+        with self._lock:
+            self._pending -= 1
+            last = self._pending <= 0
+        if last:
+            self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout=None) -> bool:
+        return self._done.wait(timeout)
+
+    def result(self, timeout=None) -> tuple[dict, dict]:
+        """Block for the grad jobs, then combine: (new_state, metrics)."""
+        if not self.wait(timeout):
+            raise TimeoutError("training step did not complete within timeout")
+        if self._errors:
+            raise RuntimeError("; ".join(self._errors))
+        # Combine exactly once, under the lock: rater updates aren't
+        # idempotent, and result() may be called from several threads.
+        with self._lock:
+            if self._combined is None:
+                self._combined = self._trainer._combine(
+                    self._state, self._shares, self._results
+                )
+            return self._combined

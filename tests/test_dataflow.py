@@ -1,0 +1,276 @@
+"""Dataflow submission: dependency-aware run graphs, device-resident buffer
+handoff, failure poisoning, and the executor shutdown contract."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceGroup,
+    Dynamic,
+    EngineCL,
+    Program,
+    RunError,
+    Static,
+)
+
+
+def scale2(offset, a):
+    return 2.0 * a
+
+
+def plus1(offset, a):
+    return a + 1.0
+
+
+def halve(offset, a):
+    return a * 0.5
+
+
+def chain_programs(x, n, lws=16):
+    """x -> y=2x -> z=y+1 -> w=z/2, linked through shared host buffers."""
+    y = np.zeros(n, np.float32)
+    z = np.zeros(n, np.float32)
+    w = np.zeros(n, np.float32)
+    p1 = Program().in_(x).out(y).kernel(scale2).work_items(n, lws)
+    p2 = Program().in_(y).out(z).kernel(plus1).work_items(n, lws)
+    p3 = Program().in_(z).out(w).kernel(halve).work_items(n, lws)
+    return (p1, p2, p3), w
+
+
+# ------------------------------------------------------------- equivalence
+def test_pipeline_bit_identical_to_blocking_serial():
+    """The non-blocking run graph produces bit-identical outputs to running
+    each stage with a blocking run()."""
+    n = 2048
+    x = np.linspace(-3, 3, n).astype(np.float32)
+
+    progs, w_graph = chain_programs(x.copy(), n)
+    eng = EngineCL().use(DeviceGroup("a"), DeviceGroup("b")).scheduler(Dynamic(4))
+    eng.run_pipeline(*progs)
+    assert not eng.has_errors(), eng.get_errors()
+
+    serial, w_serial = chain_programs(x.copy(), n)
+    eng2 = EngineCL().use(DeviceGroup("a"), DeviceGroup("b")).scheduler(Dynamic(4))
+    for p in serial:
+        eng2.program(p).run()
+        assert not eng2.has_errors(), eng2.get_errors()
+
+    np.testing.assert_array_equal(w_graph, w_serial)
+    np.testing.assert_array_equal(w_graph, (2.0 * x + 1.0) * 0.5)
+
+
+# ----------------------------------------------------- device-resident handoff
+def test_pipeline_transfers_prove_device_resident_handoff():
+    """Each stage reads what the previous stage produced on the same group:
+    only the source buffer is ever host->device transferred."""
+    n = 1024
+    x = np.arange(n, dtype=np.float32)
+    progs, w = chain_programs(x, n)
+    g = DeviceGroup("solo")
+    eng = EngineCL().use(g).scheduler(Static())
+    eng.run_pipeline(*progs)
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(w, (2.0 * x + 1.0) * 0.5)
+    # 3 stages x 1 input buffer each = 3 worst-case transfers; the two
+    # intermediates (y, z) are served still-on-device.
+    assert g.n_transfers == 1, g.transfer_stats()
+    assert g.n_cache_hits >= 2, g.transfer_stats()
+
+
+def test_iterative_swap_hands_off_device_resident():
+    """Ping-pong iterations re-consume their own outputs without a single
+    re-transfer after the first upload."""
+    n, iters = 512, 6
+    x = np.full(n, float(2 ** iters), np.float32)
+    y = np.zeros(n, np.float32)
+    g = DeviceGroup("solo")
+    prog = Program().in_(x).out(y).kernel(halve).work_items(n, 8)
+    eng = EngineCL().use(g).scheduler(Static()).program(prog)
+    eng.run_iterative(iters, swap=[(0, 0)])
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(prog._ins[0], 1.0)
+    # One upload of the initial state; every later iteration consumes the
+    # previous iteration's device-resident output.
+    assert g.n_transfers == 1, g.transfer_stats()
+    assert g.n_cache_hits >= iters - 1, g.transfer_stats()
+
+
+# ---------------------------------------------------------------- host blocking
+def test_pipeline_submission_does_not_host_block():
+    """submit_pipeline returns while the chain is still executing."""
+    n = 2048
+    x = np.ones(n, np.float32)
+    progs, w = chain_programs(x, n)
+    # ~0.1s of simulated device time per stage.
+    g = DeviceGroup("sim", sim_time_per_wi=5e-5)
+    eng = EngineCL().use(g).scheduler(Static())
+    t0 = time.perf_counter()
+    handles = eng.submit_pipeline(*progs)
+    submitted_in = time.perf_counter() - t0
+    assert not handles[-1].done()  # chain still in flight on the workers
+    assert submitted_in < 0.09  # well under one stage of device time
+    assert handles[-1].wait(30)
+    handles[-1].result()
+    np.testing.assert_allclose(w, (2.0 * x + 1.0) * 0.5)
+    # The graph edges were inferred from the shared buffers.
+    assert handles[0] in handles[1].deps and handles[1] in handles[2].deps
+
+
+# ------------------------------------------------------------------- poisoning
+def test_stage_failure_poisons_dependents_without_hanging():
+    def boom(offset, a):
+        raise RuntimeError("stage1 exploded")
+
+    n = 256
+    x = np.ones(n, np.float32)
+    progs, w = chain_programs(x, n)
+    progs[0].kernel(boom)
+    eng = EngineCL().use(DeviceGroup("a"), DeviceGroup("b")).scheduler(Dynamic(4))
+    handles = eng.submit_pipeline(*progs)
+    # Dependents complete (no hang) and report the upstream cause.
+    for h in handles:
+        assert h.wait(30), "dependent handle hung on a failed upstream run"
+    with pytest.raises(RunError, match="stage1 exploded"):
+        handles[0].result()
+    for h in handles[1:]:
+        with pytest.raises(RunError, match="poisoned"):
+            h.result()
+    # Poisoned stages never executed: their outputs are untouched.
+    np.testing.assert_array_equal(w, 0.0)
+    # The blocking wrapper surfaces the whole chain's errors.
+    eng.run_pipeline(*[p for p in progs])
+    assert eng.has_errors()
+    assert any("stage1 exploded" in e for e in eng.get_errors())
+
+
+def test_explicit_after_poisons_unrelated_program():
+    """after= orders runs that share no buffers; upstream failure still
+    poisons instead of silently running."""
+    def boom(offset, a):
+        raise RuntimeError("upstream kaput")
+
+    n = 128
+    bad = Program().in_(np.ones(n, np.float32)).out(
+        np.zeros(n, np.float32)).kernel(boom).work_items(n, 8)
+    good = Program().in_(np.ones(n, np.float32)).out(
+        np.zeros(n, np.float32)).kernel(scale2).work_items(n, 8)
+    eng = EngineCL().use(DeviceGroup("g"))
+    h1 = eng.submit(bad)
+    h2 = eng.submit(good, after=h1)
+    assert h2.wait(30)
+    with pytest.raises(RunError, match="poisoned"):
+        h2.result()
+
+
+def test_reads_from_links_programs_without_shared_buffers():
+    def boom(offset, a):
+        raise RuntimeError("producer failed")
+
+    n = 128
+    producer = Program().in_(np.ones(n, np.float32)).out(
+        np.zeros(n, np.float32)).kernel(boom).work_items(n, 8)
+    consumer = Program().in_(np.ones(n, np.float32)).out(
+        np.zeros(n, np.float32)).kernel(scale2).work_items(n, 8)
+    consumer.reads_from(producer)
+    eng = EngineCL().use(DeviceGroup("g"))
+    handles = eng.submit_pipeline(producer, consumer)
+    assert handles[0] in handles[1].deps
+    with pytest.raises(RunError, match="poisoned"):
+        handles[1].result(30)
+
+
+def test_inplace_program_not_served_stale_slices():
+    """A Program using one buffer as both input and output (in-place) must
+    not leak pre-write input slices into the cache under the run's write
+    version: a dependent reader sees only produced data."""
+    n = 1024
+    b = np.ones(n, np.float32)
+    out2 = np.zeros(n, np.float32)
+    inplace = Program().in_(b).out(b).kernel(scale2).work_items(n, 16)
+    reader = Program().in_(b).out(out2).kernel(plus1).work_items(n, 16)
+    g = DeviceGroup("solo")
+    # pipeline_depth > 1 so later chunks are sliced after earlier write-backs.
+    eng = EngineCL().use(g).scheduler(Dynamic(8))
+    eng.run_pipeline(inplace, reader)
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(b, 2.0)
+    np.testing.assert_allclose(out2, 3.0)
+
+
+def test_iterative_chain_dep_edges_stay_linear():
+    """Same-program chains keep one predecessor edge per run (transitive
+    ordering), not an edge to every older in-flight run."""
+    n, iters = 256, 12
+    x = np.full(n, float(2 ** iters), np.float32)
+    y = np.zeros(n, np.float32)
+    prog = Program().in_(x).out(y).kernel(halve).work_items(n, 8)
+    eng = EngineCL().use(DeviceGroup("solo")).scheduler(Static()).program(prog)
+    handles = eng.submit_iterative(iters, swap=[(0, 0)])
+    assert all(len(h.deps) <= 1 for h in handles), [len(h.deps) for h in handles]
+    for h in handles:
+        assert h.wait(30)
+        h.result()
+    np.testing.assert_allclose(prog._ins[0], 1.0)
+
+
+# ------------------------------------------------------- serving decode chains
+def test_decode_chain_matches_step_loop():
+    """make_decode_chain (device-resident multi-step decode) produces the
+    same tokens as the step-at-a-time loop."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    from repro.models import params as P
+    from repro.serve import make_decode_chain, make_decode_step, make_prefill_step
+
+    cfg = reduced(get_config("qwen1.5-4b"))
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0), jnp.float32)
+    b, plen, gen = 4, 8, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0, cfg.vocab)
+    prefill = make_prefill_step(cfg, api)
+
+    def cache():
+        return P.materialize(api.cache_spec(cfg, b, plen + gen, 1),
+                             jax.random.PRNGKey(2), jnp.float32)
+
+    decode = make_decode_step(cfg, api)
+    tok, c = prefill(params, {"tokens": tokens}, cache())
+    loop = [tok]
+    for i in range(gen - 1):
+        tok, c = decode(params, c, tok, jnp.int32(plen + i))
+        loop.append(tok)
+    want = np.asarray(jnp.concatenate(loop, axis=1))
+
+    chain = jax.jit(make_decode_chain(cfg, api), static_argnums=(4,))
+    tok0, c0 = prefill(params, {"tokens": tokens}, cache())
+    toks, last, _ = chain(params, c0, tok0, jnp.int32(plen), gen - 1)
+    got = np.asarray(jnp.concatenate([tok0, toks], axis=1))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(last), want[:, -1:])
+
+
+# ---------------------------------------------------------- executor lifecycle
+def test_submit_after_shutdown_raises_deterministically():
+    n = 128
+    prog = Program().in_(np.ones(n, np.float32)).out(
+        np.zeros(n, np.float32)).kernel(scale2).work_items(n, 8)
+    eng = EngineCL().use(DeviceGroup("g"))
+    eng.program(prog).run()
+    assert not eng.has_errors()
+    rt = eng._runtime
+    rt.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        rt.executor.submit(rt.groups[0], lambda: None)
+    # The engine survives a runtime-level shutdown: _ensure_runtime replaces
+    # the dead executor instead of submitting into it.
+    eng.run()
+    assert not eng.has_errors(), eng.get_errors()
+    # And engine.shutdown() itself stays re-entrant.
+    eng.shutdown()
+    eng.program(prog).run()
+    assert not eng.has_errors(), eng.get_errors()
+    eng.shutdown()
