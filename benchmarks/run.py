@@ -9,11 +9,15 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
                        persistent runtime (Future-based submit())
   - pipeline         : derived = waited-chain/pipelined speedup of a linked-
                        buffer run graph (plus transfer-count ratio)
+  - serve            : derived = mean decode-batch occupancy / tokens per
+                       second / rejection rate of the continuous-batching
+                       server under an offered-load sweep
   - roofline         : derived = roofline fraction per (arch, shape) cell
 
-Also writes ``BENCH_coexec.json`` (balance / efficiency / overhead) and
+Also writes ``BENCH_coexec.json`` (balance / efficiency / overhead),
 ``BENCH_pipeline.json`` (pipelined vs. waited-chain wall-clock + transfer
-counts) so successive PRs have a perf trajectory to diff against.
+counts) and ``BENCH_serve.json`` (serving latency/throughput under load) so
+successive PRs have a perf trajectory to diff against.
 
 Fast mode (default) uses reduced iteration counts so the full suite runs in
 minutes on the CI container; ``--full`` reproduces the paper-scale settings.
@@ -193,6 +197,27 @@ def pipeline_bench(rows: list[str], n_stages: int = 6, n: int = 1 << 20,
         json.dump(out, f, indent=2, sort_keys=True)
 
 
+def serve_bench(rows: list[str], full: bool,
+                json_path: str = "BENCH_serve.json") -> None:
+    """Continuous-batching server under offered load: p50/p99 latency,
+    tokens/s, mean decode-batch occupancy, deadline rejection rate.
+    Emits ``BENCH_serve.json``."""
+    from benchmarks import serve_load as S
+
+    out = S.run(n_requests=32 if full else 16,
+                rates=(25.0, 100.0, 400.0) if full else (50.0, 400.0))
+    for r in out["sweep"]:
+        tag = f"{r['rate_rps']:g}rps" + ("_slo" if r["deadline_s"] else "")
+        rows.append(f"serve_p99_{tag},{r['p99_s'] * 1e6:.0f},"
+                    f"{r['mean_batch_occupancy']:.2f}")
+        rows.append(f"serve_tokens_{tag},{r['wall_s'] * 1e6:.0f},"
+                    f"{r['tokens_per_s']:.1f}")
+        if r["deadline_s"]:
+            rows.append(f"serve_rejection_{tag},0,{r['rejection_rate']:.3f}")
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+
+
 def _timed(fn, *args) -> float:
     t0 = time.perf_counter()
     fn(*args)
@@ -220,12 +245,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
         "--tables", nargs="*",
-        default=["usability", "overhead", "coexec", "async", "pipeline", "roofline"],
+        default=["usability", "overhead", "coexec", "async", "pipeline",
+                 "serve", "roofline"],
     )
     ap.add_argument("--json", default="BENCH_coexec.json",
                     help="machine-readable balance/efficiency/overhead report")
     ap.add_argument("--pipeline-json", default="BENCH_pipeline.json",
                     help="machine-readable pipelined-vs-waited chain report")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="machine-readable serving load-sweep report")
     args = ap.parse_args()
 
     rows: list[str] = ["name,us_per_call,derived"]
@@ -241,6 +269,8 @@ def main() -> None:
     if "pipeline" in args.tables:
         pipeline_bench(rows, reps=5 if args.full else 3,
                        json_path=args.pipeline_json)
+    if "serve" in args.tables:
+        serve_bench(rows, args.full, json_path=args.serve_json)
     if "roofline" in args.tables:
         roofline(rows)
     print("\n".join(rows))

@@ -1,0 +1,118 @@
+"""Offered-load sweep through the continuous-batching inference server.
+
+Replays seeded Poisson arrival traces at increasing request rates and
+measures what a serving operator actually watches: p50/p99 end-to-end
+latency, delivered tokens/s, mean decode-batch occupancy (the continuous-
+batching win: > 1 means independent requests really shared decode batches),
+and — for the final overloaded pass, which reuses the service-time model the
+earlier passes warmed — the deadline rejection rate.
+
+Emits ``BENCH_serve.json`` via ``benchmarks/run.py --tables serve``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def _percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
+              gen: int, seg_len: int, max_batch: int, seed: int,
+              admission, deadline_s: Optional[float], group, kernels) -> dict:
+    from repro.core import Static
+    from repro.serve import InferenceServer
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, plen).astype(np.int32)
+               for _ in range(n_requests)]
+    gaps = rng.exponential(1.0 / rate, n_requests)
+    transfers0 = group.n_transfers
+    t0 = time.perf_counter()
+    with InferenceServer(cfg, api, params, groups=[group], scheduler=Static(),
+                         buckets=(plen,), max_batch=max_batch, seg_len=seg_len,
+                         max_new_cap=gen, max_wait_ms=2.0,
+                         admission=admission, kernels=kernels) as srv:
+        handles = []
+        for p, gap in zip(prompts, gaps):
+            time.sleep(gap)
+            handles.append(srv.submit(p, gen, deadline_s=deadline_s))
+        for h in handles:
+            h.wait(timeout=600)
+        s = srv.stats()
+    wall = time.perf_counter() - t0
+    lat = sorted(h.metrics["latency"] for h in handles
+                 if not h.rejected and h.metrics["latency"] is not None)
+    return {
+        "rate_rps": rate,
+        "n_requests": n_requests,
+        "deadline_s": deadline_s,
+        "p50_s": _percentile(lat, 0.50),
+        "p99_s": _percentile(lat, 0.99),
+        "tokens_per_s": s["tokens_out"] / wall if wall > 0 else 0.0,
+        "mean_batch_occupancy": s["mean_occupancy"],
+        "rejection_rate": s["rejected"] / max(1, s["submitted"]),
+        "completed": s["completed"],
+        "segments": s["segments"],
+        "transfers": group.n_transfers - transfers0,
+        "wall_s": wall,
+    }
+
+
+def run(*, arch: str = "qwen1.5-4b", n_requests: int = 24, plen: int = 8,
+        gen: int = 6, seg_len: int = 2, max_batch: int = 4,
+        rates=(50.0, 400.0), seed: int = 0) -> dict:
+    """Sweep: no-deadline passes at each rate (warming one shared service
+    model), then an overloaded pass with a deadline of 2× the warmed
+    no-contention forecast — queue wait eats the budget, so the admission
+    layer rejects the tail instead of serving worthless late answers."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    from repro.models.params import materialize
+    from repro.serve import DeadlineAdmission
+    from repro.serve.batcher import segments_for
+
+    from repro.core import DeviceGroup
+    from repro.serve import ModelKernels
+
+    cfg = reduced(get_config(arch))
+    api = get_model(cfg)
+    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(seed),
+                         jnp.float32)
+    # One group + one kernel set for the whole sweep: the jit cache is warm
+    # after the discarded warmup pass, so the measured passes (and the
+    # service-time model the admission layer learns from) see steady-state
+    # service times, not compilation.
+    group = DeviceGroup("bench")
+    kernels = ModelKernels(cfg, api, params)
+    common = dict(n_requests=n_requests, plen=plen, gen=gen, seg_len=seg_len,
+                  max_batch=max_batch, group=group, kernels=kernels)
+    _one_rate(cfg, api, params, rate=rates[0], seed=seed + 10_000,
+              admission=DeadlineAdmission(), deadline_s=None,
+              **dict(common, n_requests=max_batch))  # warmup, discarded
+    admission = DeadlineAdmission()  # one model warmed across the sweep
+    sweep = []
+    for i, rate in enumerate(rates):
+        sweep.append(_one_rate(cfg, api, params, rate=rate, seed=seed + i,
+                               admission=admission, deadline_s=None, **common))
+    forecast = admission.forecast(plen, segments_for(gen, seg_len))
+    deadline_s = 2.0 * forecast if forecast else None
+    sweep.append(_one_rate(cfg, api, params, rate=rates[-1],
+                           seed=seed + len(rates), admission=admission,
+                           deadline_s=deadline_s, **common))
+    return {
+        "arch": arch,
+        "config": {"n_requests": n_requests, "prompt_len": plen, "gen": gen,
+                   "seg_len": seg_len, "max_batch": max_batch},
+        "sweep": sweep,
+    }

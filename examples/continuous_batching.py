@@ -1,0 +1,57 @@
+"""Continuous-batching inference server in ~40 lines.
+
+Independent requests arrive over time; the server pads them into shape
+buckets, batches them into shared KV-cache slot groups, and decodes in
+fixed-length segments — requests exit and join *between* segments, so the
+decode batch stays full under staggered arrivals.  Every result is
+bit-identical to running that request alone through one-shot generate.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import get_model
+from repro.models.params import materialize
+from repro.serve import InferenceServer, make_generate
+
+cfg = reduced(get_config("qwen1.5-4b"))
+api = get_model(cfg)
+params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0), jnp.float32)
+
+PLEN, GEN, N = 8, 6, 12
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, PLEN).astype(np.int32) for _ in range(N)]
+
+server = InferenceServer(
+    cfg, api, params,
+    buckets=(PLEN,),      # prompts are right-padded to a shape bucket
+    max_batch=4,          # KV slots per bucket group
+    seg_len=2,            # decode segment length: the join/exit quantum
+    max_new_cap=GEN,
+)
+
+with server:
+    handles = []
+    for p, gap in zip(prompts, rng.exponential(5e-3, N)):
+        time.sleep(gap)  # Poisson-ish arrivals
+        handles.append(server.submit(p, GEN, deadline_s=120.0))
+    results = [h.result(timeout=300) for h in handles]
+    stats = server.stats()
+
+reference = make_generate(cfg, api)
+for p, got in zip(prompts, results):
+    want = np.asarray(reference(params, {"tokens": jnp.asarray(p[None])}, GEN))[0]
+    assert np.array_equal(got, want), (got, want)
+
+lat = sorted(h.metrics["latency"] for h in handles)
+print(f"served {stats['completed']}/{N} requests, "
+      f"mean decode occupancy {stats['mean_occupancy']:.2f} "
+      f"({stats['midstream_joins']} joined mid-stream), "
+      f"p50 latency {lat[N // 2] * 1e3:.0f}ms")
+print("all results bit-identical to one-shot generate")

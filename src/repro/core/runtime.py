@@ -71,6 +71,11 @@ class RunHandle:
         self.deps = tuple(deps)
         self._epilogue = epilogue
         self._poisoned = False
+        # Done-callbacks: appended under _lock while not _finalized; the
+        # finalizing thread flips _finalized under the same lock, so every
+        # callback lands in exactly one of (final drain, immediate fire).
+        self._finalized = False
+        self._callbacks: List[Callable[["RunHandle"], None]] = []
         self._prepared = False
         self._prepare_done = threading.Event()
         # One fresh version per (run, buffer) — see version_for_write.
@@ -158,16 +163,50 @@ class RunHandle:
                     self.record_error(f"epilogue: {traceback.format_exc()}")
             if self._started:
                 self.introspector.end_run()
-            self._done.set()
+            self._finalize()
 
     def _fail(self, msgs: Sequence[str]) -> None:
         """Complete immediately without running (e.g. validation errors)."""
         with self._lock:
             self._errors.extend(msgs)
             self._pending_workers = 0
+        self._finalize()
+
+    def _finalize(self) -> None:
+        """Final state transition: set done, then fire callbacks exactly once.
+
+        _finalized flips under _lock *before* _done is set so a concurrent
+        add_done_callback either lands in the drained batch or observes
+        _finalized and fires immediately — never neither, never both."""
+        with self._lock:
+            self._finalized = True
+            cbs, self._callbacks = self._callbacks, []
         self._done.set()
+        for fn in cbs:
+            self._run_callback(fn)
+
+    def _run_callback(self, fn: Callable[["RunHandle"], None]) -> None:
+        try:
+            fn(self)
+        except BaseException:  # noqa: BLE001 — a callback must not kill the
+            traceback.print_exc()  # worker thread (or skip later callbacks)
 
     # -- caller-facing -----------------------------------------------------
+    def add_done_callback(self, fn: Callable[["RunHandle"], None]) -> None:
+        """Call ``fn(handle)`` exactly once when this run reaches a final
+        state — success, worker failure, validation failure, or upstream
+        poisoning — after ``done()`` is True (so ``result()`` inside the
+        callback never blocks).  A handle that is already final fires ``fn``
+        immediately on the calling thread; otherwise it fires on the worker
+        thread that finalizes the run (after the epilogue, if any).
+        Callback exceptions are printed and swallowed: they must not kill a
+        resident worker or starve later callbacks."""
+        with self._lock:
+            if not self._finalized:
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
     def done(self) -> bool:
         return self._done.is_set()
 

@@ -1,11 +1,20 @@
-"""Serving launcher: batched prefill + decode, optionally co-executed.
+"""Serving launcher: one-shot generate, co-executed generate, and the
+continuous-batching server.
 
-``--coexec`` splits the request batch across simulated-heterogeneous device
-groups through the EngineCL scheduler (the paper's regime: independent
-data-parallel chunks), reporting balance/work-share from the introspector.
+Three modes over one shared generate path (``serve.make_generate`` — the
+plain and co-executed variants previously re-implemented prefill+chain with
+*different* cache materializations; now both build caches through
+``serve.zeros_cache`` and are bit-identical, which ``--verify`` asserts):
 
+    # one-shot batched generate
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
-        --requests 16 --prompt-len 32 --gen 8 --coexec --scheduler hguided
+        --requests 16 --prompt-len 32 --gen 8
+
+    # co-executed across simulated-heterogeneous groups (paper's regime)
+    ... --coexec --scheduler hguided --verify
+
+    # continuous-batching server, Poisson arrival replay
+    ... --server --requests 32 --rate 200 --verify
 """
 from __future__ import annotations
 
@@ -22,20 +31,112 @@ from repro.core import DeviceGroup, Dynamic, EngineCL, HGuided, Program, Static
 from repro.launch.specs import make_batch
 from repro.models import get_model
 from repro.models.params import materialize
-from repro.serve import make_decode_chain, make_prefill_step
+from repro.serve import InferenceServer, make_generate
 from repro.configs.base import ShapeCell
 
 
-def generate(cfg, api, params, batch, gen: int):
-    """Plain batched generate: prefill, then a device-resident decode chain
-    (no host sync per token — serve.make_decode_chain)."""
-    b, s = batch["tokens"].shape
-    cache = materialize(api.cache_spec(cfg, b, s + gen, 1), jax.random.PRNGKey(0), jnp.float32)
-    prefill = jax.jit(make_prefill_step(cfg, api))
-    chain = jax.jit(make_decode_chain(cfg, api), static_argnums=(4,), donate_argnums=(1,))
-    tok, cache = prefill(params, batch, cache)
-    toks, _, _ = chain(params, cache, tok, jnp.int32(s), gen - 1)
-    return jnp.concatenate([tok, toks], axis=1)
+def _schedulers():
+    return {"static": Static(), "dynamic": Dynamic(8), "hguided": HGuided()}
+
+
+def _groups(coexec: bool):
+    if not coexec:
+        return [DeviceGroup("serve:0")]
+    return [
+        DeviceGroup("pod-a", power=2.0, sim_time_per_wi=0.0),
+        DeviceGroup("pod-b", power=1.0, sim_time_per_wi=0.0),
+    ]
+
+
+def run_oneshot(cfg, api, params, batch, gen: int):
+    """Plain batched generate through the shared prefill+chain helper."""
+    return make_generate(cfg, api)(params, batch, gen)
+
+
+def run_coexec(cfg, api, params, batch, args) -> np.ndarray:
+    """Split the request batch across device groups through the engine —
+    the same ``make_generate`` path, embedded as the chunk kernel."""
+    extra = {k: v for k, v in batch.items() if k != "tokens"}
+    generate = make_generate(cfg, api, jit=False)
+
+    def kern(offset, tokens, *extras):
+        b = {"tokens": tokens, **dict(zip(extra.keys(), extras))}
+        return generate(params, b, args.gen)
+
+    out = np.zeros((args.requests, args.gen), np.int32)
+    prog = (
+        Program()
+        .in_(np.asarray(batch["tokens"]))
+        .out(out)
+        .kernel(kern, "generate")
+        .work_items(args.requests, 1)
+    )
+    for e in extra.values():
+        prog.in_(np.asarray(e))
+    eng = EngineCL().use(*_groups(True)).scheduler(
+        _schedulers()[args.scheduler]).program(prog)
+    eng.run()
+    if eng.has_errors():
+        raise SystemExit("\n".join(eng.get_errors()))
+    s = eng.introspector.summary()
+    print(f"co-exec generated {out.shape} in {s['response_time']:.2f}s "
+          f"balance={s['balance']:.3f} share={s['work_share']}")
+    return out
+
+
+def run_server(cfg, api, params, args) -> None:
+    """Replay a seeded Poisson arrival trace through ``InferenceServer``."""
+    rng = np.random.default_rng(args.seed + 2)
+    prompts = [
+        rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    gaps = rng.exponential(1.0 / args.rate, args.requests)
+    server = InferenceServer(
+        cfg, api, params,
+        groups=_groups(args.coexec),
+        scheduler=_schedulers()[args.scheduler],
+        buckets=(args.prompt_len,),
+        max_batch=args.max_batch,
+        seg_len=args.seg_len,
+        max_new_cap=max(args.gen, 1),
+        max_wait_ms=args.max_wait_ms,
+    )
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    t0 = time.perf_counter()
+    with server:
+        handles = []
+        for p, gap in zip(prompts, gaps):
+            time.sleep(gap)
+            handles.append(server.submit(p, args.gen, deadline_s=deadline))
+        results = []
+        for h in handles:
+            # Wait for the *final* state before reading `rejected`: a
+            # request may pass submit-time admission and still be rejected
+            # later, at boarding time, once queue wait has eaten its budget.
+            h.wait(timeout=600)
+            results.append(None if h.rejected else h.result(timeout=600))
+    wall = time.perf_counter() - t0
+    lat = sorted(h.metrics["latency"] for h in handles if not h.rejected)
+    s = server.stats()
+    pct = (f"p50={lat[len(lat) // 2] * 1e3:.0f}ms "
+           f"p99={lat[-1] * 1e3:.0f}ms " if lat else "")
+    print(
+        f"served {s['completed']}/{args.requests} requests in {wall:.2f}s "
+        f"(rate {args.rate}/s, {s['rejected']} rejected) "
+        f"{pct}occupancy={s['mean_occupancy']:.2f} "
+        f"tokens/s={s['tokens_out'] / wall:.1f}"
+    )
+    if args.verify:
+        generate = make_generate(cfg, api)
+        for p, r in zip(prompts, results):
+            if r is None:
+                continue
+            want = np.asarray(generate(params, {"tokens": jnp.asarray(p[None])},
+                                       args.gen))[0]
+            assert np.array_equal(r, want), (r, want)
+        print(f"verify: {sum(r is not None for r in results)} results "
+              "bit-identical to one-shot generate")
 
 
 def main() -> None:
@@ -46,72 +147,47 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--coexec", action="store_true")
-    ap.add_argument("--scheduler", default="hguided", choices=["static", "dynamic", "hguided"])
+    ap.add_argument("--scheduler", default="hguided",
+                    choices=["static", "dynamic", "hguided"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--server", action="store_true",
+                    help="continuous-batching server, Poisson arrivals")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="offered load, requests/s (server mode)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request latency budget (0 = none)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seg-len", type=int, default=2)
+    ap.add_argument("--max-wait-ms", type=float, default=10.0)
+    ap.add_argument("--verify", action="store_true",
+                    help="assert outputs bit-identical to one-shot generate")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full:
         cfg = reduced(cfg)
     api = get_model(cfg)
-    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(args.seed), jnp.float32)
+    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(args.seed),
+                         jnp.float32)
+
+    if args.server:
+        run_server(cfg, api, params, args)
+        return
+
     cell = ShapeCell("serve", args.prompt_len, args.requests, "prefill")
     batch = make_batch(cfg, cell, jax.random.PRNGKey(args.seed + 1))
-
     t0 = time.time()
     if not args.coexec:
-        toks = generate(cfg, api, params, batch, args.gen)
+        toks = run_oneshot(cfg, api, params, batch, args.gen)
         print(f"generated {toks.shape} in {time.time() - t0:.2f}s")
         print(np.asarray(toks[: min(4, args.requests)]))
         return
-
-    # Co-execution: requests are independent → exactly the paper's regime.
-    extra = {k: v for k, v in batch.items() if k != "tokens"}
-
-    def kern(offset, tokens, *extras):
-        b = {"tokens": tokens, **dict(zip(extra.keys(), extras))}
-        return generate_jitless(cfg, api, params, b, args.gen)
-
-    # One jit-able request-chunk kernel (prefill + device-resident decode
-    # chain — serve.make_decode_chain, shared with the plain path).
-    prefill = make_prefill_step(cfg, api)
-    chain = make_decode_chain(cfg, api)
-
-    def generate_jitless(cfg, api, params, b, gen):
-        bsz, s = b["tokens"].shape
-        from repro.models.params import abstract
-
-        cache = jax.tree_util.tree_map(
-            lambda sd: jnp.zeros(sd.shape, sd.dtype),
-            abstract(api.cache_spec(cfg, bsz, s + gen, 1), jnp.dtype(cfg.compute_dtype)),
-        )
-        tok, cache = prefill(params, b, cache)
-        toks, _, _ = chain(params, cache, tok, s, gen - 1)
-        return jnp.concatenate([tok, toks], axis=1)
-
-    out = np.zeros((args.requests, args.gen), np.int32)
-    groups = [
-        DeviceGroup("pod-a", power=2.0, sim_time_per_wi=0.0),
-        DeviceGroup("pod-b", power=1.0, sim_time_per_wi=0.0),
-    ]
-    sched = {"static": Static(), "dynamic": Dynamic(8), "hguided": HGuided()}[args.scheduler]
-    prog = (
-        Program()
-        .in_(np.asarray(batch["tokens"]))
-        .out(out)
-        .kernel(kern, "generate")
-        .work_items(args.requests, 1)
-    )
-    for e in extra.values():
-        prog.in_(np.asarray(e))
-    eng = EngineCL().use(*groups).scheduler(sched).program(prog)
-    eng.run()
-    if eng.has_errors():
-        raise SystemExit("\n".join(eng.get_errors()))
-    s = eng.introspector.summary()
-    print(f"co-exec generated {out.shape} in {s['response_time']:.2f}s "
-          f"balance={s['balance']:.3f} share={s['work_share']}")
+    out = run_coexec(cfg, api, params, batch, args)
     print(out[: min(4, args.requests)])
+    if args.verify:
+        want = np.asarray(run_oneshot(cfg, api, params, batch, args.gen))
+        assert np.array_equal(out, want), "co-exec != one-shot generate"
+        print("verify: co-exec output bit-identical to one-shot generate")
 
 
 if __name__ == "__main__":

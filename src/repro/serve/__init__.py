@@ -1,5 +1,26 @@
+from repro.serve.admission import (  # noqa: F401
+    DeadlineAdmission,
+    ServiceModel,
+    edf_key,
+)
+from repro.serve.batcher import (  # noqa: F401
+    BatchGroup,
+    Buckets,
+    ModelKernels,
+    segments_for,
+)
+from repro.serve.server import (  # noqa: F401
+    AdmissionError,
+    InferenceServer,
+    RequestHandle,
+    ServeError,
+)
 from repro.serve.step import (  # noqa: F401
+    cache_batch_axes,
     make_decode_chain,
     make_decode_step,
+    make_generate,
     make_prefill_step,
+    make_slot_decode_step,
+    zeros_cache,
 )

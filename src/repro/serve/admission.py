@@ -1,0 +1,102 @@
+"""Deadline-aware admission for the inference server (Tier-3 strategy).
+
+Each request may carry an absolute deadline.  The batcher feeds this module
+the same *measured service time* signal ``Scheduler.observe`` gets from the
+runtime — seconds per completed prefill / decode-segment run, keyed by
+shape bucket — and admission answers one question at two points in a
+request's life:
+
+- at ``InferenceServer.submit``: is the deadline hopeless even on an empty
+  system?  Reject immediately (cheap client feedback, no queue pollution).
+- at batch-forming / join time: given what is known *now* (remaining
+  decode segments at the observed segment rate), can this request still
+  finish in time?  If not, reject late rather than burn slots on work whose
+  result is already worthless.
+
+Within a bucket the pending queue is kept in EDF order (earliest deadline
+first, FIFO among deadline-less requests), so when slots are scarce the
+requests with the tightest feasible deadlines board first.
+
+Estimates are optimistic by design (no queueing term): a request is only
+rejected when even the no-contention forecast misses its deadline.  Cold
+start admits everything — with no observations yet there is no defensible
+basis for rejection.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Optional, Tuple
+
+
+class ServiceModel:
+    """EMA of observed run service times, keyed by (kind, bucket).
+
+    The serving analog of ``ThroughputRater``: the runtime measures each
+    run once (dispatch → completion) and the batcher calls ``observe`` from
+    the run's done-callback; ``estimate`` returns the smoothed seconds or
+    None before the first observation."""
+
+    def __init__(self, alpha: float = 0.4) -> None:
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._ema: Dict[Tuple[str, int], float] = {}
+
+    def observe(self, kind: str, bucket: int, seconds: float) -> None:
+        if seconds <= 0.0 or not math.isfinite(seconds):
+            return
+        key = (kind, bucket)
+        with self._lock:
+            old = self._ema.get(key)
+            self._ema[key] = seconds if old is None else (
+                self.alpha * seconds + (1 - self.alpha) * old
+            )
+
+    def estimate(self, kind: str, bucket: int) -> Optional[float]:
+        with self._lock:
+            return self._ema.get((kind, bucket))
+
+
+class DeadlineAdmission:
+    """EDF admission policy: reject requests whose optimistic completion
+    forecast misses their deadline by more than ``slack``×.
+
+    ``slack`` > 1 tolerates estimate noise (reject only when the forecast
+    exceeds the remaining budget by that factor); ``slack`` < 1 rejects
+    conservatively early."""
+
+    def __init__(self, model: Optional[ServiceModel] = None, *,
+                 slack: float = 1.0) -> None:
+        self.model = model or ServiceModel()
+        self.slack = slack
+
+    # -- forecast ---------------------------------------------------------
+    def forecast(self, bucket: int, segments_left: int,
+                 *, include_prefill: bool = True) -> Optional[float]:
+        """Optimistic seconds to finish: prefill + remaining decode
+        segments, from observed rates.  None while unobserved (cold)."""
+        seg = self.model.estimate("segment", bucket)
+        if seg is None:
+            return None
+        total = segments_left * seg
+        if include_prefill:
+            pre = self.model.estimate("prefill", bucket)
+            total += pre if pre is not None else 0.0
+        return total
+
+    def admit(self, now: float, deadline: Optional[float], bucket: int,
+              segments_left: int, *, include_prefill: bool = True) -> bool:
+        """True = admit.  Deadline-less requests and cold buckets always
+        board; otherwise the no-contention forecast must fit the budget."""
+        if deadline is None:
+            return True
+        est = self.forecast(bucket, segments_left, include_prefill=include_prefill)
+        if est is None:
+            return True
+        return now + est * self.slack <= deadline
+
+
+def edf_key(deadline: Optional[float], seq: int) -> Tuple[float, int]:
+    """Sort key for EDF order within a bucket: earliest deadline first,
+    submission order among equal (or absent) deadlines."""
+    return (deadline if deadline is not None else math.inf, seq)

@@ -1,0 +1,337 @@
+"""Shape-bucketed continuous batching over the dataflow runtime.
+
+Layering (see DESIGN.md §Serving): ``InferenceServer`` owns the request
+queue and the event loop; this module owns everything between a formed
+batch and the runtime —
+
+- ``Buckets``        — prompt-length buckets.  XLA specializes executables
+  on shapes, so serving free-form prompt lengths directly would compile per
+  length; prompts are right-padded to the smallest bucket that fits
+  (padding is part of the serving contract: a padded request generates
+  exactly as one-shot generate on the padded prompt).
+- ``ModelKernels``   — the jit-able Program kernels, built once per server
+  and shared by every group of the same geometry so re-forming a group
+  never recompiles: a *prefill* kernel (prompt rows → first token + slot-
+  leading cache rows) and a *decode-segment* kernel (``seg_len`` per-slot
+  decode steps rolled into one ``lax.scan``).
+- ``BatchGroup``     — one live continuous batch: ``n_slots`` KV-cache
+  slots backed by slot-leading host mirror buffers that form a single
+  ``Program``, decoding in fixed-length segments submitted through
+  ``Runtime.submit(after=prev_segment)``.
+
+The segment Program's inputs are the previous segment's outputs, ping-pong
+swapped by the run epilogue (``swap_buffers``) — so segment N+1 reads
+segment N's token/position/cache buffers **device-resident** from the
+transfer cache (the one-bump-per-(run, buffer) rule: each segment's outputs
+carry one coherent write version that the next segment's input probe looks
+up; ``swap_buffers`` deliberately does not re-version the swapped-in
+buffer).  Steady-state decode therefore performs zero host→device
+transfers; only join events — which rewrite slot rows in the host mirrors
+and must ``invalidate`` them — pay a re-upload.  Per-request transfers stay
+O(1) however many segments its decode spans (asserted in
+tests/test_server.py via ``DeviceGroup.n_transfers``).
+
+Requests *exit* at segment boundaries (their slot is left to decode
+garbage — shapes are static — until a joiner overwrites the full slot row,
+which is what makes slot reuse safe: a join rewrites token, position, and
+every cache leaf row, so no stale KV survives).  Requests *join* at
+segment boundaries after their prefill — submitted as its own Program,
+concurrently with the in-flight segment — completes.
+
+With multiple DeviceGroups the segment Program's slot axis is split by the
+engine's scheduler (Static/Dynamic/HGuided) exactly like any co-executed
+kernel: slots are the data-parallel axis, the paper's regime.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.program import Program
+from repro.serve.step import (
+    cache_batch_axes,
+    make_prefill_step,
+    make_slot_decode_step,
+    zeros_cache,
+)
+
+
+class Buckets:
+    """Prompt-length shape buckets (sorted, ascending)."""
+
+    def __init__(self, sizes: Sequence[int]) -> None:
+        if not sizes:
+            raise ValueError("need at least one bucket size")
+        self.sizes = sorted(set(int(s) for s in sizes))
+        if self.sizes[0] < 1:
+            raise ValueError(f"bucket sizes must be >= 1: {self.sizes}")
+
+    def bucket_for(self, prompt_len: int) -> Optional[int]:
+        """Smallest bucket that fits, or None (prompt too long to serve)."""
+        i = bisect.bisect_left(self.sizes, prompt_len)
+        return self.sizes[i] if i < len(self.sizes) else None
+
+    @staticmethod
+    def pad(prompt: np.ndarray, bucket: int, pad_id: int) -> np.ndarray:
+        """Right-pad a 1-D prompt to the bucket boundary."""
+        out = np.full(bucket, pad_id, np.int32)
+        out[: len(prompt)] = prompt
+        return out
+
+
+def segments_for(new_tokens: int, seg_len: int) -> int:
+    """Decode segments a request needs: the first token comes from prefill,
+    the remaining ``new_tokens - 1`` from fixed-length segments."""
+    return max(0, math.ceil((new_tokens - 1) / seg_len))
+
+
+class ModelKernels:
+    """Per-server kernel factory: every BatchGroup of the same geometry
+    shares one kernel *object* per (kind, shape-key), so the per-group jit
+    cache (``DeviceGroup.compile_kernel`` keys on kernel identity) survives
+    group dissolve/re-form without recompiling."""
+
+    def __init__(self, cfg, api, params) -> None:
+        self.cfg, self.api, self.params = cfg, api, params
+        # Batch-axis geometry is max_seq-independent; probe with a tiny cache.
+        self.bax = cache_batch_axes(cfg, api, 8)
+        self.bax_leaves = jax.tree_util.tree_leaves(self.bax)
+        self.treedef = jax.tree_util.tree_structure(self.bax)
+        self._seg_fns: dict = {}
+        self._prefill_fns: dict = {}
+
+    def leaf_mirrors(self, n_slots: int, max_seq: int) -> List[np.ndarray]:
+        """Slot-leading host mirror buffers for every cache leaf."""
+        from repro.models.params import abstract
+
+        tree = abstract(self.api.cache_spec(self.cfg, 1, max_seq, 1),
+                        jnp.dtype(self.cfg.compute_dtype))
+        out = []
+        for leaf, a in zip(jax.tree_util.tree_leaves(tree), self.bax_leaves):
+            shape = leaf.shape[:a] + leaf.shape[a + 1:]
+            out.append(np.zeros((n_slots,) + shape, leaf.dtype))
+        return out
+
+    def segment_kernel(self, seg_len: int) -> Callable:
+        """``fn(offset, tok, pos, *cache_leaves) ->
+        (toks[b, seg_len], tok', pos', *cache_leaves')`` — ``seg_len``
+        per-slot decode steps (vector ``pos``: slots may sit at different
+        depths) rolled into one scan, tokens/cache device-resident across
+        steps.  Slot axis leads every buffer: the runtime slices it."""
+        fn = self._seg_fns.get(seg_len)
+        if fn is not None:
+            return fn
+        slot_decode = make_slot_decode_step(self.cfg, self.api, self.bax)
+        params, treedef = self.params, self.treedef
+
+        def seg(offset, tok, pos, *leaves):
+            cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+            def body(carry, _):
+                tok, pos, cache = carry
+                ntok, cache = slot_decode(params, cache, tok, pos[:, 0])
+                return (ntok, pos + 1, cache), ntok[:, 0]
+
+            (tok, pos, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), None, length=seg_len
+            )
+            return (jnp.swapaxes(toks, 0, 1), tok, pos,
+                    *jax.tree_util.tree_leaves(cache))
+
+        self._seg_fns[seg_len] = seg
+        return seg
+
+    def prefill_kernel(self, max_seq: int) -> Callable:
+        """``fn(offset, tokens[b, S_b]) -> (tok0[b, 1], *slot_leading_cache)``
+        — batched prefill against a fresh ``zeros_cache``; rows are
+        independent, so the runtime may split requests across groups."""
+        fn = self._prefill_fns.get(max_seq)
+        if fn is not None:
+            return fn
+        prefill = make_prefill_step(self.cfg, self.api)
+        cfg, api, params, bax = self.cfg, self.api, self.params, self.bax_leaves
+
+        def pre(offset, tokens):
+            cache = zeros_cache(cfg, api, tokens.shape[0], max_seq)
+            tok, cache = prefill(params, {"tokens": tokens}, cache)
+            leaves = [jnp.moveaxis(x, a, 0)
+                      for x, a in zip(jax.tree_util.tree_leaves(cache), bax)]
+            return (tok, *leaves)
+
+        self._prefill_fns[max_seq] = pre
+        return pre
+
+
+class BatchGroup:
+    """One live continuous batch for one bucket.  All mutating methods are
+    called from the server's single batcher thread; the runtime's worker
+    threads only touch the handles (and fire done-callbacks)."""
+
+    def __init__(self, kernels: ModelKernels, runtime, scheduler,
+                 bucket: int, n_slots: int, seg_len: int, max_seq: int) -> None:
+        self.kernels = kernels
+        self.runtime = runtime
+        self.scheduler = scheduler
+        self.bucket = bucket
+        self.n_slots = n_slots
+        self.seg_len = seg_len
+        self.max_seq = max_seq
+        self.slots: List[Optional[object]] = [None] * n_slots  # _Request per slot
+        self.dead = False
+        # -- segment Program: slot-leading mirrors, ping-pong in/out pairs --
+        tok = np.zeros((n_slots, 1), np.int32)
+        pos = np.zeros((n_slots, 1), np.int32)
+        leaves = kernels.leaf_mirrors(n_slots, max_seq)
+        toks_seg = np.zeros((n_slots, seg_len), np.int32)
+        prog = Program().in_(tok).in_(pos)
+        for b in leaves:
+            prog.in_(b)
+        prog.out(toks_seg).out(np.zeros_like(tok)).out(np.zeros_like(pos))
+        for b in leaves:
+            prog.out(np.zeros_like(b))
+        prog.kernel(kernels.segment_kernel(seg_len), f"decode_seg{seg_len}")
+        prog.work_items(n_slots, 1)
+        self.prog = prog
+        self.n_leaves = len(leaves)
+        # (in_index, out_index) ping-pong pairs: tok, pos, every cache leaf.
+        self._swap_pairs = [(0, 1), (1, 2)] + [
+            (2 + i, 3 + i) for i in range(self.n_leaves)
+        ]
+        self.seg_handle = None
+        self.prev_handle = None
+        self._seg_t0 = 0.0
+        # -- in-flight prefill wave ----------------------------------------
+        self.prefill_handle = None
+        self.prefill_wave: List[object] = []
+        self._prefill_prog: Optional[Program] = None
+        self._prefill_t0 = 0.0
+
+    # ------------------------------------------------------------- queries
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active(self) -> List[tuple]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def idle(self) -> bool:
+        return (self.seg_handle is None and self.prefill_handle is None
+                and not any(self.slots))
+
+    # ------------------------------------------------------------- prefill
+    def start_prefill(self, requests: Sequence, notify: Callable) -> None:
+        """Submit one prefill Program for a join wave (≤ free slots).  Runs
+        concurrently with any in-flight decode segment: no shared buffers,
+        so the run graph infers no edge between them."""
+        assert self.prefill_handle is None
+        assert len(requests) <= len(self.free_slots())
+        j = len(requests)
+        tokens = np.stack([r.prompt for r in requests]).astype(np.int32)
+        prog = Program().in_(tokens)
+        prog.out(np.zeros((j, 1), np.int32))
+        for b in self.kernels.leaf_mirrors(j, self.max_seq):
+            prog.out(b)
+        prog.kernel(self.kernels.prefill_kernel(self.max_seq),
+                    f"prefill_{self.bucket}")
+        prog.work_items(j, 1)
+        self.prefill_wave = list(requests)
+        self._prefill_prog = prog
+        self._prefill_t0 = _now()
+        h = self.runtime.submit(prog, self.scheduler)
+        self.prefill_handle = h
+        h.add_done_callback(lambda _h: notify())
+
+    def merge_prefill(self) -> dict:
+        """Board a completed prefill wave: write each request's first token,
+        start position, and full cache row into a free slot's host mirrors,
+        then invalidate the mirrors (their device copies are stale).  Only
+        legal between segments — an in-flight segment may slice the mirrors
+        at any moment.  Returns {"joined": n, "failed": [...], "seconds"}."""
+        h, wave, prog = self.prefill_handle, self.prefill_wave, self._prefill_prog
+        assert h is not None and h.done()
+        self.prefill_handle, self.prefill_wave, self._prefill_prog = None, [], None
+        seconds = h.metrics.get("response_time") or (_now() - self._prefill_t0)
+        if h.has_errors():
+            return {"joined": 0, "failed": list(wave), "errors": h.errors(),
+                    "seconds": seconds}
+        free = self.free_slots()
+        tok_b, pos_b = self.prog._ins[0], self.prog._ins[1]
+        leaf_bufs = self.prog._ins[2:]
+        tok0 = prog._outs[0]
+        wave_leaves = prog._outs[1:]
+        for i, req in enumerate(wave):
+            slot = free.pop(0)
+            tok_b[slot, 0] = tok0[i, 0]
+            pos_b[slot, 0] = self.bucket
+            for dst, src in zip(leaf_bufs, wave_leaves):
+                dst[slot] = src[i]
+            self.slots[slot] = req
+            req.board(slot, int(tok0[i, 0]))
+        for b in self.prog._ins:
+            self.prog.invalidate(b)
+        return {"joined": len(wave), "failed": [], "seconds": seconds}
+
+    # ------------------------------------------------------------ segments
+    def submit_segment(self, notify: Callable) -> None:
+        """Chain the next decode segment after the previous one.  The swap
+        epilogue runs worker-side, so the just-produced token/pos/cache
+        buffers become the next segment's inputs *device-resident*."""
+        assert self.seg_handle is None
+
+        def epilogue(prog=self.prog, pairs=self._swap_pairs):
+            for i_in, i_out in pairs:
+                prog.swap_buffers(i_in, i_out)
+
+        after = [self.prev_handle] if self.prev_handle is not None else None
+        self._seg_t0 = _now()
+        h = self.runtime.submit(self.prog, self.scheduler,
+                                after=after, epilogue=epilogue)
+        self.seg_handle = h
+        h.add_done_callback(lambda _h: notify())
+
+    def harvest_segment(self) -> dict:
+        """Collect a completed segment: append each active slot's new tokens
+        (truncated to what the request still needs), retire finished
+        requests, and free their slots.  Returns stats for this segment."""
+        h = self.seg_handle
+        assert h is not None and h.done()
+        self.seg_handle = None
+        seconds = h.metrics.get("response_time") or (_now() - self._seg_t0)
+        if h.has_errors():
+            return {"errors": h.errors(), "seconds": seconds}
+        self.prev_handle = h
+        # toks_seg is out 0 and never ping-ponged: stable across segments.
+        toks_seg = self.prog._outs[0]
+        n_active = 0
+        finished = []
+        for slot, req in self.active():
+            n_active += 1
+            need = req.remaining()
+            take = toks_seg[slot, : min(self.seg_len, need)]
+            req.extend(take)
+            if req.remaining() <= 0:
+                finished.append(req)
+                self.slots[slot] = None
+        return {"n_active": n_active, "finished": finished, "seconds": seconds}
+
+    def fail_all(self, errors: Sequence[str]) -> List[object]:
+        """A segment failed: group state is unrecoverable (mirrors may hold
+        partial write-backs).  Collect every request this group owes an
+        answer to; the server fails their handles and drops the group."""
+        self.dead = True
+        victims = [r for _, r in self.active()] + list(self.prefill_wave)
+        self.slots = [None] * self.n_slots
+        self.prefill_wave = []
+        self.seg_handle = None
+        self.prefill_handle = None
+        return victims
+
+
+def _now() -> float:
+    return time.monotonic()

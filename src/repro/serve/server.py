@@ -1,0 +1,428 @@
+"""Continuous-batching inference server on the dataflow runtime.
+
+The missing layer between *independent requests arriving over time* and the
+engine core, which only knows how to co-execute one data-parallel Program:
+
+    client threads ──submit()──▶ request queue (EDF per bucket)
+                                    │  admission (deadline forecast)
+                                    ▼
+                          batcher thread (one event loop)
+                    form/join/exit at decode-segment boundaries
+                                    │
+                                    ▼
+            BatchGroup Programs ──Runtime.submit(after=…)──▶ DeviceGroups
+
+``submit`` is thread-safe and non-blocking: it returns a ``RequestHandle``
+future (``result()/done()``, latency metrics).  A single batcher thread
+owns all batching state and never polls — it sleeps on a condition variable
+that request arrivals and ``RunHandle.add_done_callback`` wake-ups notify.
+
+Semantics: greedy decode; a request padded to its shape bucket produces
+tokens **bit-identical** to one-shot ``make_generate`` on the padded
+prompt, whatever batch it shares slots with and however segments interleave
+(tests/test_server.py proves this against per-request references).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Runtime
+from repro.core.scheduler.base import Scheduler
+from repro.core.scheduler.static import Static
+from repro.serve.admission import DeadlineAdmission, edf_key
+from repro.serve.batcher import BatchGroup, Buckets, ModelKernels, segments_for
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``RequestHandle.result()`` for rejected requests."""
+
+
+class ServeError(RuntimeError):
+    """Raised by ``RequestHandle.result()`` when the backing run failed."""
+
+
+class RequestHandle:
+    """Client-facing future for one request, with latency metrics."""
+
+    def __init__(self, prompt_len: int, padded_len: int, max_new_tokens: int,
+                 deadline: Optional[float]) -> None:
+        self.prompt_len = prompt_len
+        self.padded_len = padded_len
+        self.max_new_tokens = max_new_tokens
+        self.deadline = deadline
+        self.t_arrival = time.monotonic()
+        self.t_admitted: Optional[float] = None
+        self.t_first_token: Optional[float] = None
+        self.t_done: Optional[float] = None
+        self._ev = threading.Event()
+        self._tokens: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+        self._rejected: Optional[str] = None
+
+    # -- batcher-facing ---------------------------------------------------
+    def _finish(self, tokens: np.ndarray) -> None:
+        self.t_done = time.monotonic()
+        self._tokens = tokens
+        self._ev.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self.t_done = time.monotonic()
+        self._error = exc
+        self._ev.set()
+
+    def _reject(self, reason: str) -> None:
+        self.t_done = time.monotonic()
+        self._rejected = reason
+        self._ev.set()
+
+    # -- client-facing ----------------------------------------------------
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    @property
+    def rejected(self) -> bool:
+        return self._rejected is not None
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._ev.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block for the generated tokens (``max_new_tokens`` int32);
+        raises ``AdmissionError`` if rejected, ``ServeError`` on failure."""
+        if not self._ev.wait(timeout):
+            raise TimeoutError("request did not complete within timeout")
+        if self._rejected is not None:
+            raise AdmissionError(self._rejected)
+        if self._error is not None:
+            raise ServeError(str(self._error)) from self._error
+        return self._tokens
+
+    @property
+    def metrics(self) -> dict:
+        """Latency breakdown (None until the stage happened): queue_wait =
+        arrival→boarding, ttft = arrival→first token, latency = arrival→
+        final state."""
+        def d(t):
+            return None if t is None else t - self.t_arrival
+
+        return {
+            "queue_wait": d(self.t_admitted),
+            "ttft": d(self.t_first_token),
+            "latency": d(self.t_done),
+            "prompt_len": self.prompt_len,
+            "padded_len": self.padded_len,
+            "n_tokens": 0 if self._tokens is None else int(len(self._tokens)),
+        }
+
+
+class _Request:
+    """Batcher-internal request state (single-threaded after submit)."""
+
+    __slots__ = ("handle", "prompt", "bucket", "gen", "deadline", "seq",
+                 "tokens", "slot")
+
+    def __init__(self, handle: RequestHandle, prompt: np.ndarray, bucket: int,
+                 gen: int, deadline: Optional[float], seq: int) -> None:
+        self.handle = handle
+        self.prompt = prompt  # padded to the bucket
+        self.bucket = bucket
+        self.gen = gen
+        self.deadline = deadline
+        self.seq = seq
+        self.tokens: List[int] = []
+        self.slot: Optional[int] = None
+
+    def board(self, slot: int, first_token: int) -> None:
+        self.slot = slot
+        self.tokens = [first_token]
+        self.handle.t_first_token = time.monotonic()
+
+    def extend(self, toks) -> None:
+        self.tokens.extend(int(t) for t in toks)
+
+    def remaining(self) -> int:
+        return self.gen - len(self.tokens)
+
+
+class InferenceServer:
+    """Accepts independent requests over time and serves them through
+    continuously-batched prefill/decode-segment runs on the engine runtime.
+
+    Parameters
+    ----------
+    cfg, api, params : the model triple (as used by ``make_generate``).
+    groups           : DeviceGroups to co-execute on (default: one group on
+                       the first local device).  With several groups plus a
+                       Dynamic/HGuided scheduler, each batch's slot axis is
+                       split across them — the paper's co-execution regime.
+    scheduler        : engine scheduler for slot partitioning (default Static).
+    buckets          : prompt-length shape buckets (right-padding contract).
+    max_batch        : KV slots per bucket group == max decode batch.
+    seg_len          : decode tokens per segment; joins/exits happen only at
+                       segment boundaries (the continuous-batching quantum).
+    max_new_cap      : upper bound on ``max_new_tokens`` (sizes the caches).
+    max_wait_ms      : batch-forming window — a lone request waits at most
+                       this long for companions before decoding starts.
+    admission        : DeadlineAdmission (deadline forecasting + EDF).
+    """
+
+    def __init__(self, cfg, api, params, *,
+                 groups: Optional[Sequence[DeviceGroup]] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 buckets: Sequence[int] = (16, 32, 64, 128),
+                 max_batch: int = 4,
+                 seg_len: int = 4,
+                 max_new_cap: int = 64,
+                 max_wait_ms: float = 5.0,
+                 admission: Optional[DeadlineAdmission] = None,
+                 pad_id: int = 0,
+                 kernels: Optional[ModelKernels] = None) -> None:
+        self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
+        self.runtime = Runtime(self.groups)
+        self.scheduler = scheduler or Static()
+        # Kernel objects may be shared across servers: DeviceGroups key their
+        # jit cache on kernel identity, so a restarted server on warm groups
+        # (rolling restart, benchmark sweep) skips recompilation entirely.
+        self.kernels = kernels or ModelKernels(cfg, api, params)
+        self.buckets = Buckets(buckets)
+        self.max_batch = int(max_batch)
+        self.seg_len = int(seg_len)
+        self.max_new_cap = int(max_new_cap)
+        self.max_wait_s = max_wait_ms / 1e3
+        self.admission = admission or DeadlineAdmission()
+        self.pad_id = pad_id
+        self._cv = threading.Condition()
+        self._pending: dict = {}        # bucket -> EDF-sorted [_Request]
+        self._groups: dict = {}         # bucket -> BatchGroup
+        self._seq = itertools.count()
+        self._closing = False
+        self._stats = {
+            "submitted": 0, "completed": 0, "rejected": 0, "failed": 0,
+            "segments": 0, "occupancy_sum": 0, "tokens_out": 0,
+            "prefill_waves": 0, "joins": 0, "midstream_joins": 0,
+        }
+        self._thread = threading.Thread(
+            target=self._loop, name="enginecl-batcher", daemon=True
+        )
+        self._thread.start()
+
+    # ---------------------------------------------------------------- API
+    def submit(self, prompt, max_new_tokens: int = 16, *,
+               deadline_s: Optional[float] = None) -> RequestHandle:
+        """Enqueue one request; thread-safe, returns immediately.
+
+        ``prompt`` is a 1-D int32 token array (padded to its shape bucket);
+        ``deadline_s`` is a latency budget relative to now — requests whose
+        budget the admission forecast cannot meet are rejected (the handle
+        resolves with ``AdmissionError``) instead of queued."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not (1 <= max_new_tokens <= self.max_new_cap):
+            raise ValueError(
+                f"max_new_tokens must be in [1, {self.max_new_cap}]"
+            )
+        bucket = self.buckets.bucket_for(len(prompt))
+        if bucket is None:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds largest bucket "
+                f"{self.buckets.sizes[-1]}"
+            )
+        now = time.monotonic()
+        deadline = None if deadline_s is None else now + deadline_s
+        handle = RequestHandle(len(prompt), bucket, max_new_tokens, deadline)
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("server is closed")
+            self._stats["submitted"] += 1
+            req = _Request(handle, self.buckets.pad(prompt, bucket, self.pad_id),
+                           bucket, max_new_tokens, deadline, next(self._seq))
+            if not self.admission.admit(now, deadline, bucket,
+                                        segments_for(max_new_tokens, self.seg_len)):
+                self._stats["rejected"] += 1
+                handle._reject(
+                    f"deadline {deadline_s * 1e3:.1f}ms below forecast for "
+                    f"bucket {bucket}"
+                )
+                return handle
+            q = self._pending.setdefault(bucket, [])
+            q.append(req)
+            q.sort(key=lambda r: edf_key(r.deadline, r.seq))
+            self._cv.notify_all()
+        return handle
+
+    def stats(self) -> dict:
+        with self._cv:
+            s = dict(self._stats)
+        occ = s.pop("occupancy_sum")
+        s["mean_occupancy"] = occ / s["segments"] if s["segments"] else 0.0
+        s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
+        return s
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop accepting requests.  ``drain=True`` serves everything
+        already queued or in flight first; ``drain=False`` rejects queued
+        requests but still finishes boarded ones."""
+        with self._cv:
+            self._closing = True
+            if not drain:
+                for q in self._pending.values():
+                    for r in q:
+                        self._stats["rejected"] += 1
+                        r.handle._reject("server closed")
+                    q.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout)
+        self.runtime.shutdown()
+
+    def __enter__(self) -> "InferenceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------- event loop
+    def _notify(self) -> None:
+        with self._cv:
+            self._cv.notify_all()
+
+    def _loop(self) -> None:
+        try:
+            while True:
+                with self._cv:
+                    timer = self._advance_all()
+                    if (self._closing and not self._pending_any()
+                            and not self._groups):
+                        return
+                    self._cv.wait(timeout=timer)
+        except BaseException as exc:  # noqa: BLE001 — a dying batcher must
+            self._crash(exc)  # resolve every handle, not strand clients
+
+    def _crash(self, exc: BaseException) -> None:
+        """Batcher thread failed (scheduling bug, runtime shut down under
+        us): fail every outstanding handle so no client blocks forever on
+        ``result()``, then let the thread exit."""
+        import traceback
+
+        traceback.print_exc()
+        with self._cv:
+            victims: List[_Request] = []
+            for q in self._pending.values():
+                victims.extend(q)
+                q.clear()
+            for grp in self._groups.values():
+                victims.extend(grp.fail_all([repr(exc)]))
+            self._groups.clear()
+            for req in victims:
+                self._stats["failed"] += 1
+                req.handle._fail(ServeError(f"batcher crashed: {exc!r}"))
+
+    def _pending_any(self) -> bool:
+        return any(self._pending.values())
+
+    def _advance_all(self) -> Optional[float]:
+        """One scheduling pass (cv held).  Returns seconds until the next
+        forming-window expiry, or None to sleep until notified."""
+        now = time.monotonic()
+        # 1. advance live groups (harvest finished segments, merge prefills,
+        #    board joiners, chain next segments, dissolve idle groups).
+        for bucket in list(self._groups):
+            grp = self._groups[bucket]
+            self._advance_group(grp, now)
+            if grp.dead or (grp.idle() and not self._pending.get(bucket)):
+                del self._groups[bucket]
+        # 2. form new groups for buckets whose window expired / filled.
+        timer = None
+        for bucket, q in self._pending.items():
+            if not q or bucket in self._groups:
+                continue
+            oldest = min(r.handle.t_arrival for r in q)
+            expires = oldest + self.max_wait_s
+            if len(q) >= self.max_batch or now >= expires or self._closing:
+                grp = BatchGroup(self.kernels, self.runtime, self.scheduler,
+                                 bucket, self.max_batch, self.seg_len,
+                                 self._max_seq(bucket))
+                self._groups[bucket] = grp
+                self._board(grp, now)
+            else:
+                wait = expires - now
+                timer = wait if timer is None else min(timer, wait)
+        return timer
+
+    def _max_seq(self, bucket: int) -> int:
+        return bucket + segments_for(self.max_new_cap, self.seg_len) * self.seg_len
+
+    def _advance_group(self, grp: BatchGroup, now: float) -> None:
+        if grp.seg_handle is not None and grp.seg_handle.done():
+            res = grp.harvest_segment()
+            if "errors" in res:
+                self._fail_group(grp, res["errors"])
+                return
+            self.admission.model.observe("segment", grp.bucket, res["seconds"])
+            self._stats["segments"] += 1
+            self._stats["occupancy_sum"] += res["n_active"]
+            for req in res["finished"]:
+                self._retire(req)
+        # Merging rewrites the segment Program's host mirrors, so it is only
+        # legal at a segment boundary (an in-flight segment may slice them
+        # at any moment).
+        if (grp.seg_handle is None and grp.prefill_handle is not None
+                and grp.prefill_handle.done()):
+            res = grp.merge_prefill()
+            self.admission.model.observe("prefill", grp.bucket, res["seconds"])
+            for req in res["failed"]:
+                self._stats["failed"] += 1
+                req.handle._fail(
+                    ServeError("; ".join(res.get("errors", ["prefill failed"])))
+                )
+            if res["joined"]:
+                self._stats["joins"] += res["joined"]
+                if self._stats["segments"]:
+                    self._stats["midstream_joins"] += res["joined"]
+            # gen=1 requests are complete straight out of prefill.
+            for slot, req in grp.active():
+                if req.remaining() <= 0:
+                    self._retire(req)
+                    grp.slots[slot] = None
+        # Starting a prefill wave touches no group mirrors — it overlaps a
+        # running segment so joiners are ready at the next boundary.
+        if grp.prefill_handle is None:
+            self._board(grp, now)
+        if grp.seg_handle is None and any(grp.slots):
+            grp.submit_segment(self._notify)
+
+    def _board(self, grp: BatchGroup, now: float) -> None:
+        """Start a prefill wave for as many pending requests as there are
+        free slots, EDF order, re-checking each deadline against the
+        forecast of the work *now* remaining."""
+        q = self._pending.get(grp.bucket)
+        if not q:
+            return
+        free = len(grp.free_slots())
+        wave: List[_Request] = []
+        while q and len(wave) < free:
+            req = q.pop(0)
+            if not self.admission.admit(now, req.deadline, grp.bucket,
+                                        segments_for(req.gen, self.seg_len)):
+                self._stats["rejected"] += 1
+                req.handle._reject("deadline unreachable at boarding time")
+                continue
+            req.handle.t_admitted = time.monotonic()
+            wave.append(req)
+        if wave:
+            self._stats["prefill_waves"] += 1
+            grp.start_prefill(wave, self._notify)
+
+    def _retire(self, req: _Request) -> None:
+        self._stats["completed"] += 1
+        self._stats["tokens_out"] += req.gen
+        req.handle._finish(np.asarray(req.tokens[: req.gen], np.int32))
+
+    def _fail_group(self, grp: BatchGroup, errors: Sequence[str]) -> None:
+        for req in grp.fail_all(errors):
+            self._stats["failed"] += 1
+            req.handle._fail(ServeError("; ".join(errors)))

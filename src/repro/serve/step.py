@@ -79,6 +79,108 @@ def make_decode_step(cfg, api):
     return decode_step
 
 
+def zeros_cache(cfg, api, batch: int, max_seq: int, *, dtype=None, par: int = 1):
+    """Fresh empty KV cache honoring each leaf's declared init.
+
+    The cache spec marks ``pos`` leaves ``neg_ones`` (−1 = empty slot) —
+    attention masks on recorded positions, so an all-zeros init would leave
+    unwritten slots *valid* at position 0 and silently attend zero keys.
+    Every cache-materialization path (one-shot generate, co-exec kernels,
+    the serving slot groups) must build caches through this one helper so
+    they share bit-identical initial state."""
+    dt = jnp.dtype(dtype) if dtype is not None else jnp.dtype(cfg.compute_dtype)
+
+    def mk(s):
+        ldt = jnp.dtype(s.dtype or dt)
+        if s.init == "neg_ones":
+            return jnp.full(s.shape, -1, ldt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, ldt)
+        return jnp.zeros(s.shape, ldt)
+
+    from repro.models.params import tree_map_specs
+
+    return tree_map_specs(mk, api.cache_spec(cfg, batch, max_seq, par))
+
+
+def cache_batch_axes(cfg, api, max_seq: int, *, par: int = 1):
+    """Per-leaf batch-axis index of the cache tree (layer-stacked leaves put
+    batch at axis 1, not 0).  Found structurally — the axis whose extent
+    tracks the requested batch size — so it holds across model families
+    without a per-family table."""
+    import jax.tree_util as jtu
+
+    from repro.models.params import Spec
+
+    is_spec = lambda x: isinstance(x, Spec)  # noqa: E731
+
+    def ax(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"cache leaf {a.shape} has no batch axis: cannot slot it")
+
+    return jtu.tree_map(ax, api.cache_spec(cfg, 1, max_seq, par),
+                        api.cache_spec(cfg, 2, max_seq, par), is_leaf=is_spec)
+
+
+def make_slot_decode_step(cfg, api, batch_axes):
+    """Per-slot decode: ``(params, cache, token, pos) -> (token, cache)``
+    where ``pos`` is a *vector* — one absolute position per slot.
+
+    The stock ``api.decode`` takes one scalar position for the whole batch,
+    which is exactly what continuous batching cannot have: requests that
+    joined at different times sit at different depths of their own KV
+    timeline.  ``jax.vmap`` over the batch axis turns the scalar-pos step
+    into a per-slot one whose every row is bit-identical to a batch-size-1
+    decode of that slot alone (asserted in tests/test_server.py — the
+    serving subsystem's equivalence guarantee rests on it).
+
+    ``cache`` leaves here are **slot-leading** (batch axis moved to the
+    front, the layout the batcher's host mirrors use); ``batch_axes`` names
+    each leaf's native batch axis so the single-example view can be
+    reconstructed inside the vmap."""
+    decode = make_decode_step(cfg, api)
+
+    def one(params, cache, token, pos):
+        c1 = jax.tree_util.tree_map(lambda x, a: jnp.expand_dims(x, a),
+                                    cache, batch_axes)
+        ntok, c1 = decode(params, c1, token[None], pos)
+        return ntok[0], jax.tree_util.tree_map(lambda x, a: jnp.squeeze(x, a),
+                                               c1, batch_axes)
+
+    return jax.vmap(one, in_axes=(None, 0, 0, 0), out_axes=(0, 0))
+
+
+def make_generate(cfg, api, *, jit: bool = True):
+    """One-shot batched generate: prefill + device-resident decode chain.
+
+    The single cache-materialization and prefill+chain path shared by the
+    plain and co-executed serving launchers (they previously re-implemented
+    it with *different* cache inits) and the reference implementation the
+    inference server is tested bit-identical against.  ``jit=False`` returns
+    an un-jitted callable for embedding inside an already-jitted kernel.
+
+    Returned ``generate(params, batch, gen, *, cache=None)`` produces
+    ``(b, gen)`` greedy tokens; ``cache`` defaults to a fresh
+    ``zeros_cache`` sized ``prompt_len + gen``."""
+    prefill = make_prefill_step(cfg, api)
+    chain = make_decode_chain(cfg, api)
+    if jit:
+        prefill = jax.jit(prefill)
+        chain = jax.jit(chain, static_argnums=(4,), donate_argnums=(1,))
+
+    def generate(params, batch, gen: int, *, cache=None):
+        b, s = batch["tokens"].shape
+        if cache is None:
+            cache = zeros_cache(cfg, api, b, s + gen)
+        tok, cache = prefill(params, batch, cache)
+        toks, _, _ = chain(params, cache, tok, jnp.int32(s), gen - 1)
+        return jnp.concatenate([tok, toks], axis=1)
+
+    return generate
+
+
 def make_decode_chain(cfg, api):
     """Multi-step greedy decode with device-resident handoff — the serving
     analog of the runtime's dataflow run graphs: ``n_steps`` dependent

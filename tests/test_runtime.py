@@ -212,3 +212,64 @@ def test_pipeline_sees_fresh_producer_outputs():
     p1.invalidate(x)
     eng.run_pipeline(p1, p2)
     np.testing.assert_allclose(z, 2.0 * x + 1.0)
+
+
+# ------------------------------------------------------------ done callbacks
+def test_done_callback_fires_once_after_final_state():
+    """add_done_callback fires exactly once, after done() is True, for
+    success, upstream poisoning, and validation failure alike."""
+    eng = EngineCL().use(DeviceGroup("g"))
+    fired = []
+    ev = threading.Event()
+
+    p, x, y = make_prog()
+    h = eng.submit(p)
+    h.add_done_callback(lambda hh: (fired.append(hh.done()), ev.set()))
+    assert ev.wait(30)
+    h.result()
+    assert fired == [True]
+
+    # Already-final handle: fires immediately, on the calling thread.
+    late = []
+    h.add_done_callback(lambda hh: late.append(threading.get_ident()))
+    assert late == [threading.get_ident()]
+    assert fired == [True]  # original callback did not re-fire
+
+    # Poisoned dependent completes through the same callback path.
+    def boom(offset, a):
+        raise RuntimeError("upstream dead")
+
+    bad = Program().in_(np.ones(64, np.float32)).out(
+        np.zeros(64, np.float32)).kernel(boom).work_items(64, 8)
+    good, _, _ = make_prog()
+    hb = eng.submit(bad)
+    hg = eng.submit(good, after=hb)
+    poisoned = threading.Event()
+    hg.add_done_callback(lambda hh: poisoned.set())
+    assert poisoned.wait(30)
+    assert hg.has_errors() and "poisoned" in hg.errors()[0]
+
+    # Validation failure (_fail path: the run never reaches a worker).
+    hv = eng.submit(Program().in_(np.ones(8, np.float32)).out(
+        np.zeros(8, np.float32)).work_items(8, 1))  # no kernel set
+    seen = threading.Event()
+    hv.add_done_callback(lambda hh: seen.set())
+    assert seen.wait(5)
+    with pytest.raises(RunError, match="no kernel"):
+        hv.result()
+
+
+def test_done_callback_exception_does_not_break_worker_or_later_callbacks():
+    eng = EngineCL().use(DeviceGroup("g"))
+    p, x, y = make_prog()
+    got = threading.Event()
+    h = eng.submit(p)
+    h.add_done_callback(lambda hh: 1 / 0)
+    h.add_done_callback(lambda hh: got.set())
+    assert got.wait(30)
+    h.result()
+    # The resident worker survived the raising callback: the engine still runs.
+    p2, x2, y2 = make_prog(scale=5.0)
+    eng.program(p2).run()
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(y2, 2.0 * x2 + 1.0)
