@@ -1,0 +1,91 @@
+"""Ragged decode-attention sweep: dense ``cached_attention`` path vs the
+ragged flash-decode algorithm across cache depths and slot occupancies.
+
+The continuous-batching steady state is *shallow slots in a deep cache*:
+slots join mid-stream, so most of a ``max_seq``-deep KV timeline is empty
+most of the time, yet the dense path attends (and moves) the full depth
+every token.  The ragged kernel's work scales with each slot's recorded
+depth instead.  Timed on warm (pre-compiled) kernels:
+
+- ``dense_us``  — the dense grouped-GQA fallback (what serving runs with
+  ``kernel_impl="reference"``), full-depth FLOPs regardless of occupancy.
+- ``ragged_us`` — ``flash_decode_xla``, the portable lowering of the Pallas
+  kernel's algorithm (``lax.while_loop`` over needed KV tiles; the TPU
+  kernel additionally skips per-slot, not just per-batch).
+- ``tiles_touched / tiles_total`` — the kernel's per-slot tile-skip math
+  (``needed_tiles``): the fraction of cache FLOPs/bytes actually touched.
+
+Emits ``BENCH_decode.json`` via ``benchmarks/run.py --tables decode``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _occupancies(depth: int) -> dict:
+    return {
+        "shallow": 16,              # just-joined slots (steady-state serving)
+        "half": depth // 2,
+        "full": depth - 1,
+    }
+
+
+def run(full: bool = False, *, batch: int = 8, heads: int = 8, kv: int = 2,
+        hd: int = 64, block_k: int = 128, reps: int = 20) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import flash_decode_xla, needed_tiles
+    from repro.models.attention import _ragged_dense
+
+    depths = (512, 2048, 4096) if full else (512, 2048)
+    rng = np.random.default_rng(0)
+    dense = jax.jit(lambda q, k, v, kp, p: _ragged_dense(q, k, v, kp, p))
+    ragged = jax.jit(lambda q, k, v, kp, p: flash_decode_xla(
+        q, k, v, kp, p, block_k=block_k))
+
+    sweep = []
+    for depth in depths:
+        q = jnp.asarray(rng.standard_normal((batch, 1, heads, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((batch, depth, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((batch, depth, kv, hd)), jnp.float32)
+        for name, occ in _occupancies(depth).items():
+            kpos = np.full((batch, depth), -1, np.int32)
+            kpos[:, : occ + 1] = np.arange(occ + 1)
+            kpos = jnp.asarray(kpos)
+            pos = jnp.full((batch,), occ, jnp.int32)
+            t_d = _timed(dense, q, k, v, kpos, pos, reps=reps)
+            t_r = _timed(ragged, q, k, v, kpos, pos, reps=reps)
+            nt = np.asarray(needed_tiles(kpos, pos, block_k=min(block_k, depth)))
+            total = batch * (-(-depth // min(block_k, depth)))
+            sweep.append({
+                "depth": depth,
+                "occupancy": name,
+                "pos": occ,
+                "dense_us": t_d * 1e6,
+                "ragged_us": t_r * 1e6,
+                "speedup": t_d / t_r if t_r > 0 else 0.0,
+                "tokens_per_s_dense": batch / t_d,
+                "tokens_per_s_ragged": batch / t_r,
+                "tiles_touched": int(nt.sum()),
+                "tiles_total": int(total),
+                "flops_touched_frac": float(nt.sum() / total),
+            })
+    return {
+        "batch": batch, "heads": heads, "kv_heads": kv, "head_dim": hd,
+        "block_k": block_k, "sweep": sweep,
+    }
+
+
+def _timed(fn, *args, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*args))  # warm compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -12,11 +12,14 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
   - serve            : derived = mean decode-batch occupancy / tokens per
                        second / rejection rate of the continuous-batching
                        server under an offered-load sweep
+  - decode           : derived = ragged-vs-dense decode-attention speedup
+                       per (cache depth, slot occupancy) cell
   - roofline         : derived = roofline fraction per (arch, shape) cell
 
 Also writes ``BENCH_coexec.json`` (balance / efficiency / overhead),
 ``BENCH_pipeline.json`` (pipelined vs. waited-chain wall-clock + transfer
-counts) and ``BENCH_serve.json`` (serving latency/throughput under load) so
+counts), ``BENCH_serve.json`` (serving latency/throughput under load) and
+``BENCH_decode.json`` (ragged flash-decode vs dense cached attention) so
 successive PRs have a perf trajectory to diff against.
 
 Fast mode (default) uses reduced iteration counts so the full suite runs in
@@ -218,6 +221,24 @@ def serve_bench(rows: list[str], full: bool,
         json.dump(out, f, indent=2, sort_keys=True)
 
 
+def decode_bench(rows: list[str], full: bool,
+                 json_path: str = "BENCH_decode.json") -> None:
+    """Ragged flash-decode vs the dense decode-attention path across cache
+    depths and slot occupancies (tokens/s + fraction of cache FLOPs/bytes
+    actually touched).  Emits ``BENCH_decode.json``."""
+    from benchmarks import decode as D
+
+    out = D.run(full=full)
+    for r in out["sweep"]:
+        tag = f"{r['depth']}_{r['occupancy']}"
+        rows.append(f"decode_ragged_{tag},{r['ragged_us']:.0f},"
+                    f"{r['speedup']:.2f}")
+        rows.append(f"decode_touched_{tag},{r['dense_us']:.0f},"
+                    f"{r['flops_touched_frac']:.4f}")
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+
+
 def _timed(fn, *args) -> float:
     t0 = time.perf_counter()
     fn(*args)
@@ -246,7 +267,7 @@ def main() -> None:
     ap.add_argument(
         "--tables", nargs="*",
         default=["usability", "overhead", "coexec", "async", "pipeline",
-                 "serve", "roofline"],
+                 "serve", "decode", "roofline"],
     )
     ap.add_argument("--json", default="BENCH_coexec.json",
                     help="machine-readable balance/efficiency/overhead report")
@@ -254,6 +275,8 @@ def main() -> None:
                     help="machine-readable pipelined-vs-waited chain report")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="machine-readable serving load-sweep report")
+    ap.add_argument("--decode-json", default="BENCH_decode.json",
+                    help="machine-readable ragged-decode sweep report")
     args = ap.parse_args()
 
     rows: list[str] = ["name,us_per_call,derived"]
@@ -271,6 +294,8 @@ def main() -> None:
                        json_path=args.pipeline_json)
     if "serve" in args.tables:
         serve_bench(rows, args.full, json_path=args.serve_json)
+    if "decode" in args.tables:
+        decode_bench(rows, args.full, json_path=args.decode_json)
     if "roofline" in args.tables:
         roofline(rows)
     print("\n".join(rows))

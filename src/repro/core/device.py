@@ -75,11 +75,14 @@ class DeviceGroup:
     def compile_kernel(self, program) -> Callable:
         """Per-group jit of the (possibly specialized) kernel."""
         fn = self.specialized_kernel or program._kernel
-        key = (id(fn), program._kernel_name)
+        # Kernel signature is (offset, *ins, *args): donated input i is
+        # jit argument i + 1.
+        donate = tuple(1 + i for i in program.donated_ins)
+        key = (id(fn), program._kernel_name, donate)
         if key not in self._compiled:
             # Placement follows the device_put inputs, so one jit per group
             # suffices (computation runs where its operands live).
-            self._compiled[key] = jax.jit(fn)
+            self._compiled[key] = jax.jit(fn, donate_argnums=donate)
         return self._compiled[key]
 
     @staticmethod
@@ -106,9 +109,14 @@ class DeviceGroup:
         for k in [k for k in self._xfer_cache if k[0] in dead]:
             del self._xfer_cache[k]
 
-    def _cache_get(self, key):
+    def _cache_get(self, key, *, take: bool = False):
         with self._xfer_lock:
             self._drain_dead()
+            if take:
+                # Consume the entry: the caller will donate the device array
+                # to a kernel (XLA deletes it), so a retained entry would
+                # serve a dead buffer on the next probe.
+                return self._xfer_cache.pop(key, None)
             v = self._xfer_cache.get(key)
             if v is not None:
                 self._xfer_cache.move_to_end(key)
@@ -148,11 +156,14 @@ class DeviceGroup:
             }
 
     def _input_slice(self, program, host_buf, offset_wi: int, size_wi: int,
-                     bucket: int):
+                     bucket: int, *, consume: bool = False):
         """Device copy of one input's package slice, padded to the bucket.
 
         Cached per (buffer version, offset, bucket): iterative/serving reruns
-        over unchanged buffers skip the host->device transfer entirely."""
+        over unchanged buffers skip the host->device transfer entirely.
+        ``consume`` (donated inputs): the kernel will delete the device
+        array, so a cache hit is *popped* and fresh transfers are never
+        retained — each upload/handoff serves exactly one run."""
         r = program.buffer_ratio(host_buf)
         lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
         need = int(r * bucket) - (hi - lo)
@@ -169,7 +180,7 @@ class DeviceGroup:
         # id ties every entry to the buffer whose death evicts it.
         key = (id(host_buf), version, lo, hi, need) if version is not None else None
         if key is not None:
-            cached = self._cache_get(key)
+            cached = self._cache_get(key, take=consume)
             if cached is not None:
                 with self._xfer_lock:
                     self.n_cache_hits += 1
@@ -177,7 +188,8 @@ class DeviceGroup:
             if need > 0:
                 # Handoff probe: a producer run stashed this exact element
                 # range unpadded (need=0).  Padding happens device-side —
-                # no host re-read, no device_put.
+                # no host re-read, no device_put.  The padded array is a new
+                # buffer, so donating it never touches the stashed base.
                 base = self._cache_get(key[:4] + (0,))
                 if base is not None:
                     with self._xfer_lock:
@@ -185,7 +197,8 @@ class DeviceGroup:
                     dev = jnp.pad(
                         base, [(0, need)] + [(0, 0)] * (base.ndim - 1)
                     )
-                    self._cache_put(key, dev, host_buf)
+                    if not consume:
+                        self._cache_put(key, dev, host_buf)
                     return dev
         b = host_buf[lo:hi]
         if need > 0:
@@ -193,7 +206,7 @@ class DeviceGroup:
         dev = jax.device_put(b, self.device)
         with self._xfer_lock:
             self.n_transfers += 1
-        if key is not None:
+        if key is not None and not consume:
             self._cache_put(key, dev, host_buf)
         return dev
 
@@ -222,9 +235,11 @@ class DeviceGroup:
         """
         fn = self.compile_kernel(program)
         bucket = self._bucket(size_wi, program.lws)
+        donated = set(program.donated_ins)
         ins = [
-            self._input_slice(program, b, offset_wi, size_wi, bucket)
-            for b in program._ins
+            self._input_slice(program, b, offset_wi, size_wi, bucket,
+                              consume=i in donated)
+            for i, b in enumerate(program._ins)
         ]
         # offset passed as a traced scalar: no recompile per package.
         res = fn(jnp_int32(offset_wi), *ins, *program._args)

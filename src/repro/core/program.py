@@ -79,6 +79,7 @@ class Program:
         self._kernel: Optional[Callable] = None
         self._kernel_name: str = "kernel"
         self._args: list[Any] = []
+        self._donated_ins: tuple[int, ...] = ()
         self._out_pattern = Fraction(1, 1)  # out elems per work-item
         self.gws: Optional[int] = None
         self.lws: int = 1
@@ -131,6 +132,32 @@ class Program:
     def writes(self) -> tuple:
         """Declared write set: the host buffers this Program's kernel produces."""
         return tuple(self._outs)
+
+    def donate(self, *in_indices: int) -> "Program":
+        """Donate input buffers (by ``in_`` index) to the kernel.
+
+        The jitted kernel may then alias the donated inputs' device buffers
+        to its outputs (XLA buffer donation), so iterative Programs that
+        carry large state (a KV cache ping-ponged between segments) update
+        it in place on device instead of copying it every run.  Donated
+        device inputs are *consumed*: the transfer cache hands them over and
+        drops its entry (a retained entry would reference a deleted buffer),
+        so each cached upload/handoff of a donated input serves exactly one
+        run — the intended pattern is produce-once/consume-once chains like
+        ``swap_buffers`` ping-pong, where the next run reads the *new*
+        version anyway.  Only worthwhile when input and output shapes/dtypes
+        match (XLA pairs them); host buffers are unaffected."""
+        idx = sorted(set(int(i) for i in in_indices))
+        for i in idx:
+            if not 0 <= i < len(self._ins):
+                raise IndexError(f"donate index {i} out of range for "
+                                 f"{len(self._ins)} inputs")
+        self._donated_ins = tuple(idx)
+        return self
+
+    @property
+    def donated_ins(self) -> tuple:
+        return self._donated_ins
 
     def args(self, *args) -> "Program":
         self._args = list(args)

@@ -5,5 +5,10 @@ validation in this container); on real TPU pass interpret=False (default).
 Models select the path via cfg.kernel_impl.
 """
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.flash_decode import (  # noqa: F401
+    flash_decode,
+    flash_decode_xla,
+    needed_tiles,
+)
 from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
 from repro.kernels.ssm_scan import ssm_scan  # noqa: F401

@@ -27,6 +27,22 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0, q_offs
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
+def flash_decode_ref(q, k, v, kpos, pos, *, window: int = 0):
+    """Dense ragged-decode oracle. q: (B,1,H,hd); k/v: (B,S,KV,hd) (any
+    storage dtype); kpos: (B,S) recorded positions (−1 = empty); pos: (B,)
+    per-slot query positions.  Attends every key with ``0 <= kpos <= pos``
+    (window-masked when set); a slot with no valid keys returns zeros.
+
+    One definition shared with serving's dense fallback
+    (``models.attention._ragged_dense``): the kernel parity suite then
+    proves exactly the dispatch equivalence serving relies on — the Pallas
+    path and the default path compute the same contract."""
+    from repro.models.attention import _ragged_dense
+
+    return _ragged_dense(q, k, v, kpos, jnp.asarray(pos, jnp.int32),
+                         window=window)
+
+
 def ssm_scan_ref(dt, x, b_mat, c_mat, a, h0):
     """Mamba selective scan, sequential ground truth.
 

@@ -161,11 +161,21 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=10.0)
     ap.add_argument("--verify", action="store_true",
                     help="assert outputs bit-identical to one-shot generate")
+    ap.add_argument("--kernel", default="",
+                    choices=["", "reference", "pallas", "pallas_interpret"],
+                    help="override cfg.kernel_impl (pallas_interpret runs "
+                         "the Pallas kernels — flash-attention prefill and "
+                         "ragged flash-decode — on CPU; --verify still "
+                         "holds: the kernel path is bit-identical per row)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full:
         cfg = reduced(cfg)
+    if args.kernel:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, kernel_impl=args.kernel)
     api = get_model(cfg)
     params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(args.seed),
                          jnp.float32)

@@ -150,22 +150,73 @@ def prefill_with_cache(p, x, positions, cfg, cache, *, window=0, prefix_len=0):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 
 
+def pos_vector(pos, b: int):
+    """Normalize a decode position to a per-slot vector: a scalar (uniform
+    batch) broadcasts to (B,); a (B,) vector (continuous batch — slots sit
+    at different depths of their own KV timeline) passes through."""
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        return jnp.broadcast_to(p, (b,))
+    if p.shape != (b,):
+        raise ValueError(f"pos must be scalar or shape ({b},), got {p.shape}")
+    return p
+
+
 def decode_step(p, x, pos, cfg, cache, *, window=0):
-    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position."""
+    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position
+    or a (B,) vector of per-slot positions (native continuous batching)."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    posv = pos_vector(pos, b)
+    positions = posv[:, None]
     q, k, v = _project_qkv(p, x, positions, cfg)
     cs = cache["k"].shape[1]
-    slot = pos % cs if window else pos
+    slot = posv % cs if window else posv
+    bidx = jnp.arange(b)
     new_cache = {
-        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1),
-        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1),
-        "pos": jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], positions.astype(cache["pos"].dtype), slot, 1
-        ),
+        "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slot].set(posv.astype(cache["pos"].dtype)),
     }
-    out = cached_attention(q, new_cache, pos, cfg, window=window)
+    out = cached_attention(q, new_cache, posv, cfg, window=window)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def ragged_valid_mask(kpos, pos, window: int):
+    """THE ragged-decode validity predicate, shared by every decode path
+    (dense fallback, seq-sharded mesh combine, and the Pallas kernel — the
+    bit-identity contract requires one definition): a recorded position is
+    attendable iff ``0 <= kpos <= pos`` and, for rolling caches, within the
+    window.  ``kpos``/``pos`` broadcast elementwise."""
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window > 0:
+        valid &= kpos > pos - window
+    return valid
+
+
+def _ragged_dense(q, k, v, kpos, posv, *, window=0):
+    """Dense ragged-decode attention: one query per slot over the cache as
+    stored, masked by recorded positions, GQA via grouped-head einsum
+    reshape (no materialized ``repeat_kv`` — the eager path used to pay
+    H/KV× the cache in memory traffic every step).  ``posv``: (B,) per-slot
+    positions.  Rows are independent, so a slot's output is bit-identical
+    whatever batch it shares the einsum with; a slot with no valid keys
+    (pos = −1, empty cache) returns zeros — the same contract as the
+    ``kernels.flash_decode`` Pallas kernel."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    vm = ragged_valid_mask(kpos, posv[:, None], window)[:, None, None, None, :]
+    logits = jnp.where(vm, logits, -1e30)
+    m = logits.max(axis=-1, keepdims=True)
+    # Mask p explicitly (not via exp underflow): an all-empty slot has
+    # m == -1e30 and exp(0) == 1 everywhere, which must not count.
+    p = jnp.where(vm, jnp.exp(logits - m), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    probs = (p / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(q.dtype))
+    return out.reshape(b, sq, h, hd)
 
 
 def flash_decode_attention(q, cache, pos, cfg, *, window=0):
@@ -180,6 +231,8 @@ def flash_decode_attention(q, cache, pos, cfg, *, window=0):
     Collectives per layer: all-gather of q (B*H*hd, ~MBs) at the shard_map
     boundary + two psums of (B,H[,hd]) — vs the replicated-cache baseline's
     per-token cache broadcast (GBs).  This is the §Perf flash-decode change.
+    ``pos`` may be a (B,) per-slot vector; GQA is a grouped-head einsum
+    (no repeat_kv materialization of the local cache slice).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -187,32 +240,30 @@ def flash_decode_attention(q, cache, pos, cfg, *, window=0):
 
     mesh = current_mesh()
     bax = batch_axes(mesh)
-    h = q.shape[2]
+    b, _, h, hd = q.shape
     kvh = cache["k"].shape[2]
     n_rep = h // kvh
     scale = cfg.hd ** -0.5
+    posv = pos_vector(pos, b)
 
-    def local_fn(q, k, v, kpos):
+    def local_fn(q, k, v, kpos, posv):
         # q: (B, 1, H, hd) replicated over model; k/v: (B, S_loc, KV, hd).
-        kk = L.repeat_kv(k.astype(q.dtype), n_rep)
-        vv = L.repeat_kv(v.astype(q.dtype), n_rep)
-        s = jnp.einsum("bqhd,bkhd->bhk", q[:, 0:1], kk,
+        qg = q[:, 0].reshape(q.shape[0], kvh, n_rep, hd)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qg, k.astype(q.dtype),
                        preferred_element_type=jnp.float32) * scale
-        valid = kpos <= pos
-        if window:
-            valid &= kpos > pos - window
-        valid &= kpos >= 0
-        s = jnp.where(valid[:, None, :], s, -1e30)
-        m_loc = s.max(axis=-1)  # (B, H)
-        p = jnp.exp(s - m_loc[..., None])
+        vm = ragged_valid_mask(kpos, posv[:, None], window)[:, None, None, :]
+        s = jnp.where(vm, s, -1e30)
+        m_loc = s.max(axis=-1)  # (B, KV, n_rep)
+        p = jnp.where(vm, jnp.exp(s - m_loc[..., None]), 0.0)
         l_loc = p.sum(axis=-1)
-        acc = jnp.einsum("bhk,bkhd->bhd", p.astype(vv.dtype), vv).astype(jnp.float32)
+        acc = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype),
+                         v.astype(q.dtype)).astype(jnp.float32)
         m_g = jax.lax.pmax(m_loc, "model")
         corr = jnp.exp(m_loc - m_g)
         l_g = jax.lax.psum(l_loc * corr, "model")
         acc_g = jax.lax.psum(acc * corr[..., None], "model")
         out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
-        return out[:, None].astype(q.dtype)  # (B, 1, H, hd)
+        return out.reshape(out.shape[0], 1, h, hd).astype(q.dtype)
 
     spec_q = P(bax, None, None, None)
     spec_kv = P(bax, "model", None, None)
@@ -220,11 +271,11 @@ def flash_decode_attention(q, cache, pos, cfg, *, window=0):
     fn = shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(spec_q, spec_kv, spec_kv, spec_pos),
+        in_specs=(spec_q, spec_kv, spec_kv, spec_pos, P(bax)),
         out_specs=P(bax, None, None, None),
         check_vma=False,
     )
-    return fn(q, cache["k"], cache["v"], cache["pos"])
+    return fn(q, cache["k"], cache["v"], cache["pos"], posv)
 
 
 def _use_flash_decode(cfg, cache) -> bool:
@@ -237,25 +288,25 @@ def _use_flash_decode(cfg, cache) -> bool:
 
 
 def cached_attention(q, cache, pos, cfg, *, window=0):
-    """Attention of a single query over the cache, masked by recorded slot
-    positions (uniform for full and rolling caches)."""
+    """Attention of a single query per slot over the cache, masked by
+    recorded slot positions (uniform for full and rolling caches).  ``pos``
+    is a scalar (uniform batch) or a (B,) per-slot vector (continuous
+    batching — the native decode path).  Dispatch: the seq-sharded mesh
+    path when cfg.seq_shard_cache holds (dense local math), the ragged
+    Pallas kernel under cfg.kernel_impl = pallas/pallas_interpret, else the
+    dense grouped-GQA fallback."""
+    posv = pos_vector(pos, q.shape[0])
     if _use_flash_decode(cfg, cache):
-        return flash_decode_attention(q, cache, pos, cfg, window=window)
-    k, v, kpos = cache["k"], cache["v"], cache["pos"]
-    b, s, kvh, hd = k.shape
-    h = q.shape[2]
-    kk = L.repeat_kv(k.astype(q.dtype), h // kvh)
-    vv = L.repeat_kv(v.astype(q.dtype), h // kvh)
-    scale = hd ** -0.5
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
-                        preferred_element_type=jnp.float32) * scale
-    valid = (kpos <= pos)
-    if window:
-        valid &= kpos > pos - window
-    valid &= kpos >= 0
-    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        return flash_decode_attention(q, cache, posv, cfg, window=window)
+    if cfg.kernel_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.flash_decode(
+            q, cache["k"], cache["v"], cache["pos"], posv, window=window,
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+    return _ragged_dense(q, cache["k"], cache["v"], cache["pos"], posv,
+                         window=window)
 
 
 def init_cache_pos(cache):

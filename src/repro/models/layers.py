@@ -116,10 +116,14 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0, q_offset=0,
             m, l, acc = carry
             kblk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
             vblk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
-            kblk = repeat_kv(kblk, n_rep)
-            vblk = repeat_kv(vblk, n_rep)
-            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
-                           preferred_element_type=jnp.float32) * scale
+            # GQA via grouped-head einsum: one fetched K/V chunk serves its
+            # whole query-head group — no materialized repeat_kv (H/KV× the
+            # chunk's memory traffic).  Head order matches repeat_kv
+            # (h = g * n_rep + r), so the (b, h, q, k) layout is unchanged.
+            qg = qblk.reshape(b, q_chunk, kv, n_rep, hd)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kblk,
+                           preferred_element_type=jnp.float32)
+            s = s.reshape(b, h, q_chunk, kv_chunk) * scale
             qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
             kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
             msk = kpos < sk  # mask kv padding
@@ -132,9 +136,10 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0, q_offset=0,
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + p.sum(-1)
-            acc_new = acc * alpha[..., None] + jnp.einsum(
-                "bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk
-            ).astype(jnp.float32)
+            pg = p.astype(qblk.dtype).reshape(b, kv, n_rep, q_chunk, kv_chunk)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", pg, vblk)
+            acc_new = acc * alpha[..., None] + pv.reshape(
+                b, h, q_chunk, hd).astype(jnp.float32)
             return (m_new, l_new, acc_new), None
 
         m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)

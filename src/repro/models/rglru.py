@@ -301,10 +301,11 @@ def prefill(params, batch, cfg, cache):
 
 
 def decode(params, token, pos, cfg, cache):
+    """One decode step; ``pos`` is a scalar or a (B,) per-slot vector."""
     from repro.models import transformer as T
 
     x = T.embed_tokens(params, token, cfg)
-    b = token.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    x, cache = run_stack(params, x, positions, cfg, mode="decode", cache=cache, pos=pos)
+    posv = A.pos_vector(pos, token.shape[0])
+    x, cache = run_stack(params, x, posv[:, None], cfg, mode="decode",
+                         cache=cache, pos=posv)
     return T.logits_fn(params, x, cfg), cache

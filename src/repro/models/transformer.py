@@ -232,7 +232,9 @@ def prefill(params, batch, cfg, cache):
 
 
 def decode(params, token, pos, cfg, cache):
-    """One decode step. token: (B,1) int32; pos: scalar int32."""
+    """One decode step. token: (B,1) int32; pos: scalar int32 or a (B,)
+    vector of per-slot positions (continuous batching: slots that joined at
+    different times sit at different depths of their own KV timeline)."""
     x = embed_tokens(params, token, cfg)
     x, cache = run_stack(params, x, None, cfg, mode="decode", cache=cache, pos=pos)
     logits = logits_fn(params, x, cfg)

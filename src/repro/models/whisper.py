@@ -157,15 +157,16 @@ def _dec_layer(lp, h, enc_out, cfg, *, mode, cache=None, pos=None):
             new_v = cache["v"].at[bidx, positions].set(v.astype(cache["v"].dtype))
             new_pos = cache["pos"].at[bidx, positions].set(positions)
             a = _attn_out(lp["self_attn"], L.attention(q, k, v, cfg, causal=True))
-        else:  # decode
-            new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
-            new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
-            pcol = jnp.full((b, 1), pos, cache["pos"].dtype)
-            new_pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pcol, pos, 1)
-            from repro.models.attention import cached_attention
+        else:  # decode — pos is a (B,) vector (slots may sit at different depths)
+            from repro.models.attention import cached_attention, pos_vector
 
+            posv = pos_vector(pos, b)
+            bidx = jnp.arange(b)
+            new_k = cache["k"].at[bidx, posv].set(k[:, 0].astype(cache["k"].dtype))
+            new_v = cache["v"].at[bidx, posv].set(v[:, 0].astype(cache["v"].dtype))
+            new_pos = cache["pos"].at[bidx, posv].set(posv.astype(cache["pos"].dtype))
             tmp_cache = {"k": new_k, "v": new_v, "pos": new_pos}
-            a = _attn_out(lp["self_attn"], cached_attention(q, tmp_cache, pos, cfg))
+            a = _attn_out(lp["self_attn"], cached_attention(q, tmp_cache, posv, cfg))
     h = h + a
 
     x2 = L.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
@@ -197,7 +198,10 @@ def _decoder(params, tokens, enc_out, cfg, *, mode, cache=None, pos=None):
     b, s = tokens.shape
     x = jnp.take(params["tok_embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
     if mode == "decode":
-        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)
+        from repro.models.attention import pos_vector
+
+        # Per-slot positions: each row looks up its own positional embedding.
+        pe = jnp.take(params["pos_embed"], pos_vector(pos, b), axis=0)[:, None]
     else:
         pe = params["pos_embed"][:s]
     x = shard(x + pe.astype(x.dtype), "batch", None, None)

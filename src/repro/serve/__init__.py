@@ -21,6 +21,5 @@ from repro.serve.step import (  # noqa: F401
     make_decode_step,
     make_generate,
     make_prefill_step,
-    make_slot_decode_step,
     zeros_cache,
 )

@@ -57,8 +57,8 @@ import jax.numpy as jnp
 from repro.core.program import Program
 from repro.serve.step import (
     cache_batch_axes,
+    make_decode_step,
     make_prefill_step,
-    make_slot_decode_step,
     zeros_cache,
 )
 
@@ -124,26 +124,34 @@ class ModelKernels:
         (toks[b, seg_len], tok', pos', *cache_leaves')`` — ``seg_len``
         per-slot decode steps (vector ``pos``: slots may sit at different
         depths) rolled into one scan, tokens/cache device-resident across
-        steps.  Slot axis leads every buffer: the runtime slices it."""
+        steps.  Slot axis leads every buffer: the runtime slices it.
+
+        The decode path is natively batched over vector positions, so the
+        slot-leading mirror layout is converted to the model's native batch
+        axes ONCE per segment (and back once), outside the scan — no
+        per-token tree churn, no vmap expand/squeeze of every cache leaf."""
         fn = self._seg_fns.get(seg_len)
         if fn is not None:
             return fn
-        slot_decode = make_slot_decode_step(self.cfg, self.api, self.bax)
-        params, treedef = self.params, self.treedef
+        decode = make_decode_step(self.cfg, self.api)
+        params, treedef, bax = self.params, self.treedef, self.bax
+        tu = jax.tree_util
 
         def seg(offset, tok, pos, *leaves):
-            cache = jax.tree_util.tree_unflatten(treedef, leaves)
+            cache = tu.tree_unflatten(treedef, leaves)
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), cache, bax)
 
             def body(carry, _):
                 tok, pos, cache = carry
-                ntok, cache = slot_decode(params, cache, tok, pos[:, 0])
+                ntok, cache = decode(params, cache, tok, pos[:, 0])
                 return (ntok, pos + 1, cache), ntok[:, 0]
 
             (tok, pos, cache), toks = jax.lax.scan(
                 body, (tok, pos, cache), None, length=seg_len
             )
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), cache, bax)
             return (jnp.swapaxes(toks, 0, 1), tok, pos,
-                    *jax.tree_util.tree_leaves(cache))
+                    *tu.tree_leaves(cache))
 
         self._seg_fns[seg_len] = seg
         return seg
@@ -197,6 +205,12 @@ class BatchGroup:
         for b in leaves:
             prog.out(np.zeros_like(b))
         prog.kernel(kernels.segment_kernel(seg_len), f"decode_seg{seg_len}")
+        # Donate the cache-leaf inputs (mirroring make_generate's
+        # donate_argnums=(1,)): each segment's jitted kernel updates the KV
+        # slots in place on device instead of copying the full cache per
+        # segment.  Safe because segments chain serially (after=prev) and
+        # the donated device slices are consumed from the transfer cache.
+        prog.donate(*range(2, 2 + len(leaves)))
         prog.work_items(n_slots, 1)
         self.prog = prog
         self.n_leaves = len(leaves)

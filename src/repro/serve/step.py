@@ -70,6 +70,9 @@ def make_prefill_step(cfg, api):
 
 
 def make_decode_step(cfg, api):
+    """``(params, cache, token, pos) -> (token, cache)``; ``pos`` is a
+    scalar (uniform batch) or a (B,) per-slot position vector — the model's
+    decode path is natively batched over vector positions."""
     def decode_step(params, cache, token, pos):
         params = cast_params_cached(params, cfg.compute_dtype)
         logits, cache = api.decode(params, token, pos, cfg, cache)
@@ -124,34 +127,6 @@ def cache_batch_axes(cfg, api, max_seq: int, *, par: int = 1):
                         api.cache_spec(cfg, 2, max_seq, par), is_leaf=is_spec)
 
 
-def make_slot_decode_step(cfg, api, batch_axes):
-    """Per-slot decode: ``(params, cache, token, pos) -> (token, cache)``
-    where ``pos`` is a *vector* — one absolute position per slot.
-
-    The stock ``api.decode`` takes one scalar position for the whole batch,
-    which is exactly what continuous batching cannot have: requests that
-    joined at different times sit at different depths of their own KV
-    timeline.  ``jax.vmap`` over the batch axis turns the scalar-pos step
-    into a per-slot one whose every row is bit-identical to a batch-size-1
-    decode of that slot alone (asserted in tests/test_server.py — the
-    serving subsystem's equivalence guarantee rests on it).
-
-    ``cache`` leaves here are **slot-leading** (batch axis moved to the
-    front, the layout the batcher's host mirrors use); ``batch_axes`` names
-    each leaf's native batch axis so the single-example view can be
-    reconstructed inside the vmap."""
-    decode = make_decode_step(cfg, api)
-
-    def one(params, cache, token, pos):
-        c1 = jax.tree_util.tree_map(lambda x, a: jnp.expand_dims(x, a),
-                                    cache, batch_axes)
-        ntok, c1 = decode(params, c1, token[None], pos)
-        return ntok[0], jax.tree_util.tree_map(lambda x, a: jnp.squeeze(x, a),
-                                               c1, batch_axes)
-
-    return jax.vmap(one, in_axes=(None, 0, 0, 0), out_axes=(0, 0))
-
-
 def make_generate(cfg, api, *, jit: bool = True):
     """One-shot batched generate: prefill + device-resident decode chain.
 
@@ -163,11 +138,16 @@ def make_generate(cfg, api, *, jit: bool = True):
 
     Returned ``generate(params, batch, gen, *, cache=None)`` produces
     ``(b, gen)`` greedy tokens; ``cache`` defaults to a fresh
-    ``zeros_cache`` sized ``prompt_len + gen``."""
+    ``zeros_cache`` sized ``prompt_len + gen`` (a caller-provided cache is
+    *donated* to the jitted prefill when ``jit=True`` — consumed, not
+    reusable after the call)."""
     prefill = make_prefill_step(cfg, api)
     chain = make_decode_chain(cfg, api)
     if jit:
-        prefill = jax.jit(prefill)
+        # Both stages donate the cache operand: generate's cache is private
+        # to the call (fresh zeros_cache or prefill output), so XLA updates
+        # it in place instead of copying the full KV cache per stage.
+        prefill = jax.jit(prefill, donate_argnums=(2,))
         chain = jax.jit(chain, static_argnums=(4,), donate_argnums=(1,))
 
     def generate(params, batch, gen: int, *, cache=None):

@@ -96,6 +96,36 @@ def test_iterative_swap_hands_off_device_resident():
     assert g.n_cache_hits >= iters - 1, g.transfer_stats()
 
 
+def test_iterative_swap_with_donated_input_stays_correct():
+    """``Program.donate``: the jitted kernel consumes its input buffers
+    (XLA donation — in-place update on device).  Ping-pong chains must stay
+    numerically identical and keep the single-upload handoff, with the
+    transfer cache *consuming* donated entries instead of retaining
+    references to deleted device buffers."""
+    n, iters = 512, 6
+    x = np.full(n, float(2 ** iters), np.float32)
+    y = np.zeros(n, np.float32)
+    g = DeviceGroup("donor")
+    prog = Program().in_(x).out(y).kernel(halve).work_items(n, 8).donate(0)
+    eng = EngineCL().use(g).scheduler(Static()).program(prog)
+    eng.run_iterative(iters, swap=[(0, 0)])
+    assert not eng.has_errors(), eng.get_errors()
+    np.testing.assert_allclose(prog._ins[0], 1.0)
+    assert g.n_transfers == 1, g.transfer_stats()
+    assert g.n_cache_hits >= iters - 1, g.transfer_stats()
+    # Consumed on hit: no donated entry lingers to be served dead later.
+    eng.run_iterative(iters, swap=[(0, 0)])
+    assert not eng.has_errors(), eng.get_errors()
+
+
+def test_donate_validates_indices():
+    p = Program().in_(np.zeros(4, np.float32))
+    with pytest.raises(IndexError):
+        p.donate(1)
+    p.donate(0)
+    assert p.donated_ins == (0,)
+
+
 # ---------------------------------------------------------------- host blocking
 def test_pipeline_submission_does_not_host_block():
     """submit_pipeline returns while the chain is still executing."""

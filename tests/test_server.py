@@ -285,6 +285,28 @@ def test_closed_server_rejects_submissions(model):
         srv.submit(np.zeros(PLEN, np.int32), 2)
 
 
+def test_kernel_path_server_bit_identity(model):
+    """kernel_impl=pallas_interpret: the ragged flash-decode Pallas kernel
+    runs inside the serving segment scan (and Pallas flash-attention in
+    prefill); results stay bit-identical to one-shot generate on the same
+    config — the serving equivalence contract extends to the kernel path."""
+    import dataclasses
+
+    cfg, api, params = model
+    kcfg = dataclasses.replace(cfg, kernel_impl="pallas_interpret")
+    gen = make_generate(kcfg, api)
+    prompts = prompts_for(kcfg, 71, 3)
+    with InferenceServer(kcfg, api, params, groups=[DeviceGroup("kpath")],
+                         scheduler=Static(), buckets=(PLEN,), max_batch=2,
+                         seg_len=2, max_new_cap=6, max_wait_ms=5.0) as srv:
+        handles = [srv.submit(p, 4) for p in prompts]
+        results = [h.result(timeout=600) for h in handles]
+        assert srv.stats()["completed"] == 3
+    for p, got in zip(prompts, results):
+        want = np.asarray(gen(params, {"tokens": jnp.asarray(p[None])}, 4))[0]
+        np.testing.assert_array_equal(got, want)
+
+
 # --------------------------------------------------- shared generate helper
 def test_make_generate_jit_and_jitless_bit_identical(model):
     """The single shared prefill+chain path (used by the plain launcher,
