@@ -211,12 +211,19 @@ def serve_bench(rows: list[str], full: bool,
                 rates=(25.0, 100.0, 400.0) if full else (50.0, 400.0))
     for r in out["sweep"]:
         tag = f"{r['rate_rps']:g}rps" + ("_slo" if r["deadline_s"] else "")
+        tag += "_paged" if r.get("kv_mode") == "paged" else ""
         rows.append(f"serve_p99_{tag},{r['p99_s'] * 1e6:.0f},"
                     f"{r['mean_batch_occupancy']:.2f}")
         rows.append(f"serve_tokens_{tag},{r['wall_s'] * 1e6:.0f},"
                     f"{r['tokens_per_s']:.1f}")
         if r["deadline_s"]:
             rows.append(f"serve_rejection_{tag},0,{r['rejection_rate']:.3f}")
+    pv = out.get("paged_vs_contiguous")
+    if pv:
+        # derived = paged/contiguous peak KV allocation at equal load (< 1:
+        # memory scales with recorded depth, not slot capacity).
+        rows.append(f"serve_kv_alloc_ratio,{pv['paged_kv_bytes_allocated']},"
+                    f"{pv['allocated_ratio']:.3f}")
     with open(json_path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
 
@@ -261,13 +268,16 @@ def roofline(rows: list[str]) -> None:
         rows.append(f"roofline_{r['arch']}_{r['shape']},{dom_s * 1e6:.0f},{fraction(r):.4f}")
 
 
+KNOWN_TABLES = ("usability", "overhead", "coexec", "async", "pipeline",
+                "serve", "decode", "roofline")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
-        "--tables", nargs="*",
-        default=["usability", "overhead", "coexec", "async", "pipeline",
-                 "serve", "decode", "roofline"],
+        "--tables", nargs="*", default=list(KNOWN_TABLES),
+        help=f"subset of {', '.join(KNOWN_TABLES)}",
     )
     ap.add_argument("--json", default="BENCH_coexec.json",
                     help="machine-readable balance/efficiency/overhead report")
@@ -278,6 +288,13 @@ def main() -> None:
     ap.add_argument("--decode-json", default="BENCH_decode.json",
                     help="machine-readable ragged-decode sweep report")
     args = ap.parse_args()
+
+    unknown = sorted(set(args.tables) - set(KNOWN_TABLES))
+    if unknown:
+        # A typo'd table name must fail loudly (nonzero exit), not emit an
+        # empty CSV a CI step would happily wave through.
+        ap.error(f"unknown table(s) {', '.join(unknown)}; "
+                 f"known: {', '.join(KNOWN_TABLES)}")
 
     rows: list[str] = ["name,us_per_call,derived"]
     report: dict = {}

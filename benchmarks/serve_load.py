@@ -26,7 +26,8 @@ def _percentile(sorted_vals, q):
 
 def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
               gen: int, seg_len: int, max_batch: int, seed: int,
-              admission, deadline_s: Optional[float], group, kernels) -> dict:
+              admission, deadline_s: Optional[float], group, kernels,
+              paged=None) -> dict:
     from repro.core import Static
     from repro.serve import InferenceServer
 
@@ -36,10 +37,15 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
     gaps = rng.exponential(1.0 / rate, n_requests)
     transfers0 = group.n_transfers
     t0 = time.perf_counter()
+    # max_new_cap is the serving API bound, deliberately above the replayed
+    # gen: contiguous groups size every slot for the cap (capacity), the
+    # paged pool reserves for each request's actual gen (recorded depth) —
+    # the allocated-bytes gap the sweep measures.
     with InferenceServer(cfg, api, params, groups=[group], scheduler=Static(),
                          buckets=(plen,), max_batch=max_batch, seg_len=seg_len,
-                         max_new_cap=gen, max_wait_ms=2.0,
-                         admission=admission, kernels=kernels) as srv:
+                         max_new_cap=2 * gen, max_wait_ms=2.0,
+                         admission=admission, kernels=kernels,
+                         paged=paged) as srv:
         handles = []
         for p, gap in zip(prompts, gaps):
             time.sleep(gap)
@@ -50,6 +56,7 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
     wall = time.perf_counter() - t0
     lat = sorted(h.metrics["latency"] for h in handles
                  if not h.rejected and h.metrics["latency"] is not None)
+    mem = s.get("memory", {})
     return {
         "rate_rps": rate,
         "n_requests": n_requests,
@@ -63,6 +70,14 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
         "segments": s["segments"],
         "transfers": group.n_transfers - transfers0,
         "wall_s": wall,
+        # KV memory columns: what the layout allocated at peak vs the bytes
+        # prefill/decode actually wrote (contiguous allocates full capacity
+        # whatever depth is recorded — the gap paging closes).
+        "kv_mode": mem.get("mode", ""),
+        "kv_bytes_allocated": mem.get("kv_bytes_allocated", 0),
+        "kv_bytes_touched": mem.get("kv_bytes_touched", 0),
+        "prefix_hits": mem.get("prefix_hits", 0),
+        "deferred": s.get("deferred", 0),
     }
 
 
@@ -110,9 +125,34 @@ def run(*, arch: str = "qwen1.5-4b", n_requests: int = 24, plen: int = 8,
     sweep.append(_one_rate(cfg, api, params, rate=rates[-1],
                            seed=seed + len(rates), admission=admission,
                            deadline_s=deadline_s, **common))
+    # Paged-vs-contiguous at equal load: replay the LAST no-deadline pass's
+    # exact arrival trace (same rate, same seed) against the block pool.
+    from repro.serve import PagedSpec
+
+    block_len = max(1, seg_len * 2)
+    paged_pass = _one_rate(
+        cfg, api, params, rate=rates[-1], seed=seed + len(rates) - 1,
+        admission=DeadlineAdmission(), deadline_s=None,
+        paged=PagedSpec(block_len=block_len), **common)
+    sweep.append(paged_pass)
+    contiguous_pass = sweep[len(rates) - 1]
     return {
         "arch": arch,
         "config": {"n_requests": n_requests, "prompt_len": plen, "gen": gen,
-                   "seg_len": seg_len, "max_batch": max_batch},
+                   "seg_len": seg_len, "max_batch": max_batch,
+                   "paged_block_len": block_len},
         "sweep": sweep,
+        "paged_vs_contiguous": {
+            "rate_rps": rates[-1],
+            "paged_kv_bytes_allocated": paged_pass["kv_bytes_allocated"],
+            "contiguous_kv_bytes_allocated":
+                contiguous_pass["kv_bytes_allocated"],
+            "allocated_ratio": (
+                paged_pass["kv_bytes_allocated"]
+                / max(1, contiguous_pass["kv_bytes_allocated"])
+            ),
+            "paged_kv_bytes_touched": paged_pass["kv_bytes_touched"],
+            "contiguous_kv_bytes_touched":
+                contiguous_pass["kv_bytes_touched"],
+        },
     }

@@ -54,6 +54,11 @@ class ModelConfig:
     #   lax.map anywhere (XLA cost_analysis counts loop bodies ONCE, so the
     #   production scan modules undercount flops/bytes by ~trip count; the
     #   dry-run compiles shallow unrolled variants and extrapolates in depth)
+    decode_block: int = 0  # decode-attention KV tile size (0 = kernel default
+    #   of 128).  Paged serving sets it to the pool's block_len so the
+    #   contiguous one-shot reference tiles its cache identically — equal
+    #   tile partitions are what extend the bit-identity contract to the
+    #   Pallas path under physical-block indirection (DESIGN.md §10).
     seq_shard_cache: bool = False  # decode: KV cache seq-sharded over model
     #   axis + shard_map flash-decode combine (§Perf hillclimb)
     ep_shard_map: bool = False  # MoE: explicit expert-parallel shard_map

@@ -36,10 +36,12 @@ class Introspector:
         self.records: List[PackageRecord] = []
         self.t_run_start: float = 0.0
         self.t_run_end: float = 0.0
+        self.counters: Dict[str, dict] = {}  # device -> transfer counters
 
     def start_run(self) -> None:
         with self._lock:
             self.records = []
+            self.counters = {}
             self.t_run_start = time.perf_counter()
 
     def end_run(self) -> None:
@@ -48,6 +50,20 @@ class Introspector:
     def record(self, rec: PackageRecord) -> None:
         with self._lock:
             self.records.append(rec)
+
+    def record_counters(self, device: str, transfers: int,
+                        cache_hits: int) -> None:
+        """Per-run host→device transfer accounting: the runtime snapshots
+        each group's cumulative counters around its portion of the run and
+        reports the delta here, so ``RunHandle.metrics`` (and the serving
+        layer's ``InferenceServer.metrics``) can attribute transfers and
+        cache hits to individual runs, not just group lifetimes."""
+        with self._lock:
+            d = self.counters.setdefault(
+                device, {"transfers": 0, "cache_hits": 0}
+            )
+            d["transfers"] += transfers
+            d["cache_hits"] += cache_hits
 
     # ------------------------------------------------------------ metrics
     @property
@@ -81,6 +97,8 @@ class Introspector:
         return {k: d["work_items"] / tot for k, d in per.items()}
 
     def summary(self) -> dict:
+        with self._lock:
+            counters = {k: dict(v) for k, v in self.counters.items()}
         return {
             "response_time": self.response_time,
             "balance": self.balance(),
@@ -90,6 +108,7 @@ class Introspector:
                 for k, v in self.per_device().items()
             },
             "n_packages": len(self.records),
+            "transfers": counters,
         }
 
 

@@ -410,6 +410,10 @@ class Runtime:
             return
         handle._mark_started()
         handle._ensure_prepared(self.groups)
+        # Per-run transfer accounting: runs on one group serialize on its
+        # worker thread, so the cumulative-counter delta around this run is
+        # exactly what this run caused on this group.
+        xfer0, hits0 = group.n_transfers, group.n_cache_hits
         pending: list = []  # (offset, size, result, t_enqueue)
         try:
             while True:
@@ -446,6 +450,11 @@ class Runtime:
             # (else the handle completes "successfully" with zeroed outputs)
             # and must not kill the resident worker thread.
             handle.record_error(f"{group.name}: {traceback.format_exc()}")
+        finally:
+            handle.introspector.record_counters(
+                group.name, group.n_transfers - xfer0,
+                group.n_cache_hits - hits0,
+            )
 
     def _write_back(self, group: DeviceGroup, handle: RunHandle,
                     off: int, size: int, res) -> None:

@@ -173,6 +173,90 @@ def flash_decode(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128,
     return out.reshape(b, 1, h, hd)
 
 
+def _paged_kernel(nt_ref, pos_ref, tbl_ref, q_ref, k_ref, v_ref, kpos_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, window: int, nk: int,
+                  scale: float):
+    # The block table is consumed entirely by the index_maps (it addresses
+    # HBM blocks); the compute body is the contiguous kernel verbatim — the
+    # paged kernel differs only in WHERE a logical tile's bytes live.
+    del tbl_ref
+    _kernel(nt_ref, pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, window=window, nk=nk, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_decode_paged(q, k, v, kpos, tables, pos, *, window: int = 0,
+                       interpret: bool = False):
+    """Ragged flash-decode over a paged KV **block pool**.
+
+    q: (B,1,H,hd); k/v: (N, bl, KV, hd) — a pool of N physical blocks of
+    ``bl`` tokens (any storage dtype); kpos: (N, bl) recorded positions
+    (−1 = empty); tables: (B, nmax) int32 block table mapping each slot's
+    logical tile to a physical block; pos: (B,) query positions.
+
+    The grid walks logical tiles exactly like :func:`flash_decode` with
+    ``block_k = bl``; the K/V/kpos index_maps resolve ``(slot, tile)``
+    through the block-table scalar-prefetch operand, *composing* with the
+    per-slot ``needed_tiles`` clamp (beyond a slot's needed tiles the same
+    physical block is re-addressed, eliding the copy, and ``pl.when`` skips
+    the compute).  Because logical tile ``i`` of a slot holds exactly the
+    same values as rows ``[i*bl, (i+1)*bl)`` of a contiguous cache, and
+    tiles are reduced in the same logical order with the same online-
+    softmax state, the output is bit-identical to :func:`flash_decode` on
+    the gathered contiguous layout with ``block_k = bl`` — the serving
+    bit-identity contract survives physical-block indirection.
+    """
+    b, sq, h, hd = q.shape
+    assert sq == 1, f"decode kernel takes one query token, got Sq={sq}"
+    kv = k.shape[2]
+    n_rep = h // kv
+    bl = k.shape[1]  # pool layout: (n_blocks, block_len, KV, hd)
+    nmax = tables.shape[1]
+    tables = jnp.asarray(tables, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    # Logical recorded positions (B, nmax*bl): O(B·S) int gather outside the
+    # kernel — the same tile-skip math as the contiguous path, applied to
+    # the table-resolved view of each slot's timeline.
+    kpos_log = kpos[tables].reshape(b, nmax * bl)
+    nt = needed_tiles(kpos_log, pos, window=window, block_k=bl)
+    qg = q[:, 0].reshape(b, kv, n_rep, hd)
+
+    def kv_idx(bi, gi, ki, nt, pos, tbl):
+        # Clamp to the slot's needed tiles FIRST (contiguous kernel's ragged
+        # fetch skip), then resolve the logical tile to its physical block.
+        return (tbl[bi, jnp.minimum(ki, nt[bi] - 1)], 0, gi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kv, nmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, hd),
+                         lambda bi, gi, ki, nt, pos, tbl: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, bl, 1, hd), kv_idx),
+            pl.BlockSpec((1, bl, 1, hd), kv_idx),
+            pl.BlockSpec((1, bl),
+                         lambda bi, gi, ki, nt, pos, tbl:
+                         (tbl[bi, jnp.minimum(ki, nt[bi] - 1)], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
+                               lambda bi, gi, ki, nt, pos, tbl: (bi, gi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, window=window, nk=nmax,
+                               scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, n_rep, hd), q.dtype),
+        interpret=interpret,
+    )(nt, pos, tables, qg, k, v, kpos)
+    return out.reshape(b, 1, h, hd)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "block_k"))
 def flash_decode_xla(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128):
     """Portable ragged decode: the kernel's algorithm as a ``lax.while_loop``

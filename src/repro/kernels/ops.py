@@ -7,6 +7,7 @@ Models select the path via cfg.kernel_impl.
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.flash_decode import (  # noqa: F401
     flash_decode,
+    flash_decode_paged,
     flash_decode_xla,
     needed_tiles,
 )

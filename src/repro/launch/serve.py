@@ -86,21 +86,25 @@ def run_coexec(cfg, api, params, batch, args) -> np.ndarray:
 
 def run_server(cfg, api, params, args) -> None:
     """Replay a seeded Poisson arrival trace through ``InferenceServer``."""
+    from repro.serve import PagedSpec
+
     rng = np.random.default_rng(args.seed + 2)
     prompts = [
         rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
         for _ in range(args.requests)
     ]
     gaps = rng.exponential(1.0 / args.rate, args.requests)
+    paged = PagedSpec(block_len=args.block_len) if args.paged else None
     server = InferenceServer(
         cfg, api, params,
-        groups=_groups(args.coexec),
-        scheduler=_schedulers()[args.scheduler],
+        groups=_groups(args.coexec and not args.paged),
+        scheduler=Static() if args.paged else _schedulers()[args.scheduler],
         buckets=(args.prompt_len,),
         max_batch=args.max_batch,
         seg_len=args.seg_len,
         max_new_cap=max(args.gen, 1),
         max_wait_ms=args.max_wait_ms,
+        paged=paged,
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
     t0 = time.perf_counter()
@@ -127,6 +131,15 @@ def run_server(cfg, api, params, args) -> None:
         f"{pct}occupancy={s['mean_occupancy']:.2f} "
         f"tokens/s={s['tokens_out'] / wall:.1f}"
     )
+    mem = s.get("memory", {})
+    if mem.get("mode") == "paged":
+        print(
+            f"paged KV: peak {mem['blocks_peak']}/{mem['blocks_total']} "
+            f"blocks ({mem['kv_bytes_allocated']} B allocated, "
+            f"{mem['kv_bytes_touched']} B touched), "
+            f"{mem['prefix_hits']} prefix hits, {mem['cow']} CoW, "
+            f"{s['deferred']} boardings deferred"
+        )
     if args.verify:
         generate = make_generate(cfg, api)
         for p, r in zip(prompts, results):
@@ -159,6 +172,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seg-len", type=int, default=2)
     ap.add_argument("--max-wait-ms", type=float, default=10.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV block pool (block tables "
+                         "+ prefix cache; forces one group + Static)")
+    ap.add_argument("--block-len", type=int, default=4,
+                    help="tokens per KV block in --paged mode")
     ap.add_argument("--verify", action="store_true",
                     help="assert outputs bit-identical to one-shot generate")
     ap.add_argument("--kernel", default="",
@@ -176,6 +194,13 @@ def main() -> None:
         import dataclasses
 
         cfg = dataclasses.replace(cfg, kernel_impl=args.kernel)
+    if args.paged and args.kernel in ("pallas", "pallas_interpret"):
+        import dataclasses
+
+        # Tile the contiguous one-shot reference at the pool's block length
+        # so --verify compares equal logical tile partitions (the paged
+        # bit-identity contract on the Pallas path, DESIGN.md §10).
+        cfg = dataclasses.replace(cfg, decode_block=args.block_len)
     api = get_model(cfg)
     params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(args.seed),
                          jnp.float32)

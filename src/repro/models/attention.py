@@ -164,21 +164,50 @@ def pos_vector(pos, b: int):
 
 def decode_step(p, x, pos, cfg, cache, *, window=0):
     """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position
-    or a (B,) vector of per-slot positions (native continuous batching)."""
+    or a (B,) vector of per-slot positions (native continuous batching).
+    A cache carrying a ``"table"`` leaf is **paged** (a shared block pool +
+    per-slot block tables, see serve.paged): writes scatter through the
+    table into physical blocks instead of into a per-slot row."""
     b = x.shape[0]
     posv = pos_vector(pos, b)
     positions = posv[:, None]
     q, k, v = _project_qkv(p, x, positions, cfg)
-    cs = cache["k"].shape[1]
-    slot = posv % cs if window else posv
-    bidx = jnp.arange(b)
-    new_cache = {
-        "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype)),
-        "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype)),
-        "pos": cache["pos"].at[bidx, slot].set(posv.astype(cache["pos"].dtype)),
-    }
+    if "table" in cache:
+        new_cache = _paged_write(cache, k[:, 0], v[:, 0], posv, window)
+    else:
+        cs = cache["k"].shape[1]
+        slot = posv % cs if window else posv
+        bidx = jnp.arange(b)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, slot].set(posv.astype(cache["pos"].dtype)),
+        }
     out = cached_attention(q, new_cache, posv, cfg, window=window)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _paged_write(cache, k1, v1, posv, window):
+    """Scatter one token's K/V/pos through the block table.  k1/v1: (B, KV,
+    hd).  Logical index = ``pos`` (full cache) or ``pos % ring`` (rolling:
+    the logical capacity ``nmax*bl`` equals the contiguous ring size by
+    construction, so ring layout — and therefore bit-identity — is
+    preserved).  The tile index is clamped so slots whose position ran past
+    their table (exited slots decoding garbage on static shapes) write into
+    their table's sink entry instead of reading out of bounds."""
+    bl = cache["k"].shape[1]
+    nmax = cache["table"].shape[1]
+    li = posv % (nmax * bl) if window else posv
+    blk = jnp.minimum(li // bl, nmax - 1)
+    off = li % bl
+    bidx = jnp.arange(posv.shape[0])
+    phys = cache["table"][bidx, blk]
+    return {
+        **cache,
+        "k": cache["k"].at[phys, off].set(k1.astype(cache["k"].dtype)),
+        "v": cache["v"].at[phys, off].set(v1.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[phys, off].set(posv.astype(cache["pos"].dtype)),
+    }
 
 
 def ragged_valid_mask(kpos, pos, window: int):
@@ -287,15 +316,48 @@ def _use_flash_decode(cfg, cache) -> bool:
     return cache["k"].shape[1] % mesh.shape["model"] == 0
 
 
+def _paged_dense(q, cache, posv, *, window=0):
+    """Dense paged-decode attention: gather the slot's physical blocks into
+    the logical (B, S_log, KV, hd) layout through the block table, then run
+    the SAME dense ragged kernel as the contiguous path.  The gather is a
+    bit-exact permutation (logical tile i of a slot holds exactly the rows
+    a contiguous cache stores at [i*bl, (i+1)*bl)), and unreserved table
+    entries resolve to the pool's never-written null block (kpos = −1 →
+    exactly-masked), so paged outputs are bit-identical to contiguous
+    outputs on the same recorded timeline."""
+    tbl = cache["table"]
+    b, nmax = tbl.shape
+    bl = cache["k"].shape[1]
+
+    def gather(pool):
+        g = pool[tbl]  # (B, nmax, bl, ...)
+        return g.reshape((b, nmax * bl) + pool.shape[2:])
+
+    return _ragged_dense(q, gather(cache["k"]), gather(cache["v"]),
+                         gather(cache["pos"]), posv, window=window)
+
+
 def cached_attention(q, cache, pos, cfg, *, window=0):
     """Attention of a single query per slot over the cache, masked by
     recorded slot positions (uniform for full and rolling caches).  ``pos``
     is a scalar (uniform batch) or a (B,) per-slot vector (continuous
-    batching — the native decode path).  Dispatch: the seq-sharded mesh
-    path when cfg.seq_shard_cache holds (dense local math), the ragged
-    Pallas kernel under cfg.kernel_impl = pallas/pallas_interpret, else the
-    dense grouped-GQA fallback."""
+    batching — the native decode path).  Dispatch: paged caches (a
+    ``"table"`` leaf) go to the block-table Pallas kernel or the gather-
+    dense fallback; contiguous caches to the seq-sharded mesh path when
+    cfg.seq_shard_cache holds (dense local math), the ragged Pallas kernel
+    under cfg.kernel_impl = pallas/pallas_interpret, else the dense
+    grouped-GQA fallback."""
     posv = pos_vector(pos, q.shape[0])
+    if "table" in cache:
+        if cfg.kernel_impl in ("pallas", "pallas_interpret"):
+            from repro.kernels import ops as kops
+
+            return kops.flash_decode_paged(
+                q, cache["k"], cache["v"], cache["pos"], cache["table"],
+                posv, window=window,
+                interpret=cfg.kernel_impl == "pallas_interpret",
+            )
+        return _paged_dense(q, cache, posv, window=window)
     if _use_flash_decode(cfg, cache):
         return flash_decode_attention(q, cache, posv, cfg, window=window)
     if cfg.kernel_impl in ("pallas", "pallas_interpret"):
@@ -303,6 +365,7 @@ def cached_attention(q, cache, pos, cfg, *, window=0):
 
         return kops.flash_decode(
             q, cache["k"], cache["v"], cache["pos"], posv, window=window,
+            block_k=cfg.decode_block or 128,
             interpret=cfg.kernel_impl == "pallas_interpret",
         )
     return _ragged_dense(q, cache["k"], cache["v"], cache["pos"], posv,

@@ -1,5 +1,6 @@
 from repro.serve.admission import (  # noqa: F401
     DeadlineAdmission,
+    PoolAdmission,
     ServiceModel,
     edf_key,
 )
@@ -8,6 +9,12 @@ from repro.serve.batcher import (  # noqa: F401
     Buckets,
     ModelKernels,
     segments_for,
+)
+from repro.serve.paged import (  # noqa: F401
+    BlockPool,
+    PagedBatchGroup,
+    PagedSpec,
+    blocks_needed,
 )
 from repro.serve.server import (  # noqa: F401
     AdmissionError,

@@ -96,6 +96,34 @@ class DeadlineAdmission:
         return now + est * self.slack <= deadline
 
 
+class PoolAdmission:
+    """Block-availability admission for paged KV serving (next to the
+    deadline forecast: deadlines bound *time*, this bounds *memory*).
+
+    Two decision points mirror :class:`DeadlineAdmission`:
+
+    - at submit: a request whose forecast depth (prompt + every decode-
+      segment position it may write) exceeds the pool outright can never be
+      served — reject immediately.
+    - at boarding: a request may only board when the pool can cover its
+      forecast depth *now* (minus blocks already reserved by earlier wave
+      members).  Otherwise it is **deferred** — left in the queue in EDF
+      order until exits free blocks — because a boarded request's blocks
+      are reserved up front, which is what makes mid-stream pool
+      exhaustion (and the slot corruption it would cause) impossible.
+
+    Contiguous groups report infinite availability: their slots are
+    pre-allocated at full depth, so memory admission never defers."""
+
+    @staticmethod
+    def admit_submit(needed_blocks: int, capacity_blocks: int) -> bool:
+        return needed_blocks <= capacity_blocks
+
+    @staticmethod
+    def admit_board(needed_blocks: int, available_blocks: float) -> bool:
+        return needed_blocks <= available_blocks
+
+
 def edf_key(deadline: Optional[float], seq: int) -> Tuple[float, int]:
     """Sort key for EDF order within a bucket: earliest deadline first,
     submission order among equal (or absent) deadlines."""

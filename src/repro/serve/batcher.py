@@ -107,17 +107,57 @@ class ModelKernels:
         self._seg_fns: dict = {}
         self._prefill_fns: dict = {}
 
-    def leaf_mirrors(self, n_slots: int, max_seq: int) -> List[np.ndarray]:
-        """Slot-leading host mirror buffers for every cache leaf."""
-        from repro.models.params import abstract
+    def _leaf_specs(self, max_seq: int) -> list:
+        from repro.models.params import Spec
 
-        tree = abstract(self.api.cache_spec(self.cfg, 1, max_seq, 1),
-                        jnp.dtype(self.cfg.compute_dtype))
+        return jax.tree_util.tree_leaves(
+            self.api.cache_spec(self.cfg, 1, max_seq, 1),
+            is_leaf=lambda x: isinstance(x, Spec),
+        )
+
+    def leaf_mirrors(self, n_slots: int, max_seq: int) -> List[np.ndarray]:
+        """Slot-leading host mirror buffers for every cache leaf, honoring
+        each leaf's declared init (position leaves are −1 = empty, the same
+        contract ``zeros_cache`` enforces on device)."""
         out = []
-        for leaf, a in zip(jax.tree_util.tree_leaves(tree), self.bax_leaves):
-            shape = leaf.shape[:a] + leaf.shape[a + 1:]
-            out.append(np.zeros((n_slots,) + shape, leaf.dtype))
+        for s, a in zip(self._leaf_specs(max_seq), self.bax_leaves):
+            dt = np.dtype(s.dtype or self.cfg.compute_dtype)
+            shape = s.shape[:a] + s.shape[a + 1:]
+            fill = {"neg_ones": -1, "ones": 1}.get(s.init, 0)
+            out.append(np.full((n_slots,) + shape, fill, dt))
         return out
+
+    def leaf_neg_init(self, max_seq: int) -> List[bool]:
+        """Which cache leaves record positions (init ``neg_ones``) — the
+        leaves a paged pool must reset to −1 when a block is reallocated."""
+        return [s.init == "neg_ones" for s in self._leaf_specs(max_seq)]
+
+    def leaf_seq_axes(self) -> List[int]:
+        """Per-leaf sequence-axis index in *mirror* coordinates (slot axis
+        removed), found structurally by probing two cache lengths.  Raises
+        for cache families without a per-leaf timeline (SSM/hybrid state):
+        those caches cannot be paged."""
+        from repro.models.params import Spec
+
+        is_spec = lambda x: isinstance(x, Spec)  # noqa: E731
+        a = jax.tree_util.tree_leaves(self.api.cache_spec(self.cfg, 1, 1, 1),
+                                      is_leaf=is_spec)
+        b = jax.tree_util.tree_leaves(self.api.cache_spec(self.cfg, 1, 2, 1),
+                                      is_leaf=is_spec)
+        axes = []
+        for x, y, bax in zip(a, b, self.bax_leaves):
+            sax = None
+            for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+                if m != n:
+                    sax = i
+                    break
+            if sax is None:
+                raise ValueError(
+                    f"cache leaf {x.shape} has no sequence axis: "
+                    f"{self.cfg.family!r} caches cannot be paged"
+                )
+            axes.append(sax - 1 if sax > bax else sax)
+        return axes
 
     def segment_kernel(self, seg_len: int) -> Callable:
         """``fn(offset, tok, pos, *cache_leaves) ->
@@ -154,6 +194,48 @@ class ModelKernels:
                     *tu.tree_leaves(cache))
 
         self._seg_fns[seg_len] = seg
+        return seg
+
+    def paged_segment_kernel(self, seg_len: int) -> Callable:
+        """Paged variant of :meth:`segment_kernel`: ``fn(offset, tok, pos,
+        table, *pool_leaves) -> (toks, tok', pos', *pool_leaves')``.  Pool
+        leaves are block-leading ``(n_blocks, layers, block_len, ...)``; the
+        per-slot block table is broadcast across the layer axis so the
+        scan-over-layers cache carry stays a uniform stacked tree, and the
+        decode path (``attention._paged_write`` / ``cached_attention``)
+        recognizes the ``"table"`` leaf and resolves physical blocks."""
+        key = ("paged", seg_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        decode = make_decode_step(self.cfg, self.api)
+        params, treedef, bax = self.params, self.treedef, self.bax
+        n_layers = self.cfg.n_layers
+        tu = jax.tree_util
+
+        def seg(offset, tok, pos, table, *leaves):
+            cache = tu.tree_unflatten(treedef, leaves)
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), cache, bax)
+            cache = dict(cache)
+            cache["table"] = jnp.broadcast_to(
+                table[None], (n_layers,) + table.shape
+            )
+
+            def body(carry, _):
+                tok, pos, cache = carry
+                ntok, cache = decode(params, cache, tok, pos[:, 0])
+                return (ntok, pos + 1, cache), ntok[:, 0]
+
+            (tok, pos, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), None, length=seg_len
+            )
+            cache = dict(cache)
+            cache.pop("table")
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), cache, bax)
+            return (jnp.swapaxes(toks, 0, 1), tok, pos,
+                    *tu.tree_leaves(cache))
+
+        self._seg_fns[key] = seg
         return seg
 
     def prefill_kernel(self, max_seq: int) -> Callable:
@@ -193,10 +275,25 @@ class BatchGroup:
         self.max_seq = max_seq
         self.slots: List[Optional[object]] = [None] * n_slots  # _Request per slot
         self.dead = False
-        # -- segment Program: slot-leading mirrors, ping-pong in/out pairs --
+        self.tokens_written = 0  # KV positions actually written (memory_stats)
+        self.last_run_metrics: dict = {}
+        self._build_segment_program()
+        self.seg_handle = None
+        self.prev_handle = None
+        self._seg_t0 = 0.0
+        # -- in-flight prefill wave ----------------------------------------
+        self.prefill_handle = None
+        self.prefill_wave: List[object] = []
+        self._prefill_prog: Optional[Program] = None
+        self._prefill_t0 = 0.0
+
+    def _build_segment_program(self) -> None:
+        """Contiguous layout: slot-leading mirrors, ping-pong in/out pairs
+        (PagedBatchGroup overrides this with pool buffers + block table)."""
+        kernels, n_slots, seg_len = self.kernels, self.n_slots, self.seg_len
         tok = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots, 1), np.int32)
-        leaves = kernels.leaf_mirrors(n_slots, max_seq)
+        leaves = kernels.leaf_mirrors(n_slots, self.max_seq)
         toks_seg = np.zeros((n_slots, seg_len), np.int32)
         prog = Program().in_(tok).in_(pos)
         for b in leaves:
@@ -218,14 +315,6 @@ class BatchGroup:
         self._swap_pairs = [(0, 1), (1, 2)] + [
             (2 + i, 3 + i) for i in range(self.n_leaves)
         ]
-        self.seg_handle = None
-        self.prev_handle = None
-        self._seg_t0 = 0.0
-        # -- in-flight prefill wave ----------------------------------------
-        self.prefill_handle = None
-        self.prefill_wave: List[object] = []
-        self._prefill_prog: Optional[Program] = None
-        self._prefill_t0 = 0.0
 
     # ------------------------------------------------------------- queries
     def free_slots(self) -> List[int]:
@@ -238,26 +327,66 @@ class BatchGroup:
         return (self.seg_handle is None and self.prefill_handle is None
                 and not any(self.slots))
 
+    # ----------------------------------------------------- memory interface
+    def reserve_estimate(self, req) -> int:
+        """Blocks this request would reserve (0: contiguous slots are
+        pre-allocated — memory admission never defers)."""
+        return 0
+
+    def memory_available(self, already_reserved: int) -> float:
+        return math.inf
+
+    def memory_stats(self) -> dict:
+        """KV memory accounting, comparable across layouts: contiguous
+        groups allocate their full capacity up front (every slot row at
+        ``max_seq``, whatever depth is recorded)."""
+        allocated = sum(b.nbytes for b in self.prog._ins[2:])
+        capacity = self.n_slots * self.max_seq
+        return {
+            "mode": "contiguous",
+            "kv_bytes_allocated": allocated,
+            "kv_bytes_device": allocated,
+            "kv_bytes_touched": int(
+                allocated * self.tokens_written / max(1, capacity)
+            ),
+            "tokens_written": self.tokens_written,
+        }
+
     # ------------------------------------------------------------- prefill
+    def _plan_prefill(self, requests: Sequence) -> List:
+        """Pick which wave members need a prefill row (all of them for the
+        contiguous layout; the paged override shares prefix blocks and
+        skips rows whose whole prompt is cached)."""
+        return list(requests)
+
     def start_prefill(self, requests: Sequence, notify: Callable) -> None:
         """Submit one prefill Program for a join wave (≤ free slots).  Runs
         concurrently with any in-flight decode segment: no shared buffers,
         so the run graph infers no edge between them."""
         assert self.prefill_handle is None
         assert len(requests) <= len(self.free_slots())
-        j = len(requests)
-        tokens = np.stack([r.prompt for r in requests]).astype(np.int32)
-        prog = Program().in_(tokens)
-        prog.out(np.zeros((j, 1), np.int32))
-        for b in self.kernels.leaf_mirrors(j, self.max_seq):
-            prog.out(b)
-        prog.kernel(self.kernels.prefill_kernel(self.max_seq),
-                    f"prefill_{self.bucket}")
-        prog.work_items(j, 1)
         self.prefill_wave = list(requests)
-        self._prefill_prog = prog
         self._prefill_t0 = _now()
-        h = self.runtime.submit(prog, self.scheduler)
+        rows = self._plan_prefill(requests)
+        if not rows:
+            # Every request hit the whole-prompt cache: nothing to run, but
+            # the merge state machine still expects a completed handle.
+            from repro.serve.paged import _DoneHandle
+
+            self._prefill_prog = None
+            h = _DoneHandle()
+        else:
+            j = len(rows)
+            tokens = np.stack([r.prompt for r in rows]).astype(np.int32)
+            prog = Program().in_(tokens)
+            prog.out(np.zeros((j, 1), np.int32))
+            for b in self.kernels.leaf_mirrors(j, self.max_seq):
+                prog.out(b)
+            prog.kernel(self.kernels.prefill_kernel(self.max_seq),
+                        f"prefill_{self.bucket}")
+            prog.work_items(j, 1)
+            self._prefill_prog = prog
+            h = self.runtime.submit(prog, self.scheduler)
         self.prefill_handle = h
         h.add_done_callback(lambda _h: notify())
 
@@ -287,6 +416,7 @@ class BatchGroup:
                 dst[slot] = src[i]
             self.slots[slot] = req
             req.board(slot, int(tok0[i, 0]))
+        self.tokens_written += len(wave) * min(self.bucket, self.max_seq)
         for b in self.prog._ins:
             self.prog.invalidate(b)
         return {"joined": len(wave), "failed": [], "seconds": seconds}
@@ -320,6 +450,7 @@ class BatchGroup:
         if h.has_errors():
             return {"errors": h.errors(), "seconds": seconds}
         self.prev_handle = h
+        self.last_run_metrics = h.metrics
         # toks_seg is out 0 and never ping-ponged: stable across segments.
         toks_seg = self.prog._outs[0]
         n_active = 0
@@ -331,8 +462,15 @@ class BatchGroup:
             req.extend(take)
             if req.remaining() <= 0:
                 finished.append(req)
-                self.slots[slot] = None
+                self.release_slot(slot)
+        self.tokens_written += n_active * self.seg_len
         return {"n_active": n_active, "finished": finished, "seconds": seconds}
+
+    def release_slot(self, slot: int) -> None:
+        """Free one KV slot (request retired or failed).  The paged variant
+        additionally releases the slot's blocks and re-points its table at
+        the sink block."""
+        self.slots[slot] = None
 
     def fail_all(self, errors: Sequence[str]) -> List[object]:
         """A segment failed: group state is unrecoverable (mirrors may hold

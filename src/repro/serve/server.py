@@ -35,8 +35,9 @@ from repro.core.device import DeviceGroup
 from repro.core.runtime import Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
-from repro.serve.admission import DeadlineAdmission, edf_key
+from repro.serve.admission import DeadlineAdmission, PoolAdmission, edf_key
 from repro.serve.batcher import BatchGroup, Buckets, ModelKernels, segments_for
+from repro.serve.paged import PagedBatchGroup, PagedSpec, validate_paged
 
 
 class AdmissionError(RuntimeError):
@@ -125,7 +126,7 @@ class _Request:
     """Batcher-internal request state (single-threaded after submit)."""
 
     __slots__ = ("handle", "prompt", "bucket", "gen", "deadline", "seq",
-                 "tokens", "slot")
+                 "tokens", "slot", "deferred")
 
     def __init__(self, handle: RequestHandle, prompt: np.ndarray, bucket: int,
                  gen: int, deadline: Optional[float], seq: int) -> None:
@@ -137,6 +138,7 @@ class _Request:
         self.seq = seq
         self.tokens: List[int] = []
         self.slot: Optional[int] = None
+        self.deferred = False  # counted once, not per boarding attempt
 
     def board(self, slot: int, first_token: int) -> None:
         self.slot = slot
@@ -182,10 +184,15 @@ class InferenceServer:
                  max_wait_ms: float = 5.0,
                  admission: Optional[DeadlineAdmission] = None,
                  pad_id: int = 0,
-                 kernels: Optional[ModelKernels] = None) -> None:
+                 kernels: Optional[ModelKernels] = None,
+                 paged: Optional[PagedSpec] = None) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
+        self.paged = paged
+        if paged is not None:
+            validate_paged(cfg, self.groups, self.scheduler, paged)
+        self.pool_admission = PoolAdmission()
         # Kernel objects may be shared across servers: DeviceGroups key their
         # jit cache on kernel identity, so a restarted server on warm groups
         # (rolling restart, benchmark sweep) skips recompilation entirely.
@@ -206,7 +213,11 @@ class InferenceServer:
             "submitted": 0, "completed": 0, "rejected": 0, "failed": 0,
             "segments": 0, "occupancy_sum": 0, "tokens_out": 0,
             "prefill_waves": 0, "joins": 0, "midstream_joins": 0,
+            "deferred": 0,
         }
+        self._mem_totals: dict = {}  # bucket -> folded memory_stats of
+        #   dissolved contiguous groups (per-bucket lineage, max-rule)
+        self._pool_states: dict = {}  # bucket -> PoolState (persistent paged)
         self._thread = threading.Thread(
             target=self._loop, name="enginecl-batcher", daemon=True
         )
@@ -241,6 +252,17 @@ class InferenceServer:
             self._stats["submitted"] += 1
             req = _Request(handle, self.buckets.pad(prompt, bucket, self.pad_id),
                            bucket, max_new_tokens, deadline, next(self._seq))
+            if self.paged is not None and not self.pool_admission.admit_submit(
+                    self._blocks_needed(bucket, max_new_tokens),
+                    self._pool_capacity(bucket)):
+                # Never servable: this request's forecast depth exceeds the
+                # pool outright — reject now rather than defer forever.
+                self._stats["rejected"] += 1
+                handle._reject(
+                    f"request needs {self._blocks_needed(bucket, max_new_tokens)}"
+                    f" KV blocks, pool capacity is {self._pool_capacity(bucket)}"
+                )
+                return handle
             if not self.admission.admit(now, deadline, bucket,
                                         segments_for(max_new_tokens, self.seg_len)):
                 self._stats["rejected"] += 1
@@ -258,10 +280,82 @@ class InferenceServer:
     def stats(self) -> dict:
         with self._cv:
             s = dict(self._stats)
+            mem = self._memory_fold()
         occ = s.pop("occupancy_sum")
         s["mean_occupancy"] = occ / s["segments"] if s["segments"] else 0.0
         s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
+        s["memory"] = mem
         return s
+
+    @property
+    def metrics(self) -> dict:
+        """Operator-facing snapshot: pool/slot utilization (blocks in use /
+        free / peak, prefix-cache hits, CoW copies, allocated-vs-touched KV
+        bytes), per-group transfer & cache-hit counters, and each live
+        group's last run metrics (which themselves carry the per-run
+        transfer counters the Introspector records)."""
+        with self._cv:
+            mem = self._memory_fold()
+            runs = {b: dict(g.last_run_metrics)
+                    for b, g in self._groups.items()}
+        return {
+            "memory": mem,
+            "groups": {g.name: g.transfer_stats() for g in self.groups},
+            "last_runs": runs,
+        }
+
+    # Within one bucket's group lineage (successive groups re-use the same
+    # logical pool/capacity), capacity-like keys take the max; across
+    # buckets — genuinely distinct allocations — everything numeric sums.
+    _MEM_MAX = frozenset({"kv_bytes_allocated", "kv_bytes_device",
+                          "blocks_peak", "blocks_total", "bytes_per_block"})
+
+    def _memory_fold(self) -> dict:
+        # Per-bucket snapshots first.  Paged pools persist across group
+        # re-forms (PoolState) and carry cumulative counters themselves;
+        # contiguous groups fold their stats per bucket at dissolve time.
+        per_bucket: dict = {
+            b: dict(st) for b, st in self._mem_totals.items()
+        }
+        for b, st in self._pool_states.items():
+            if st.pool is not None:
+                self._fold_memory_into(per_bucket.setdefault(b, {}),
+                                       st.pool.stats())
+        for b, g in self._groups.items():
+            if not isinstance(g, PagedBatchGroup):
+                self._fold_memory_into(per_bucket.setdefault(b, {}),
+                                       g.memory_stats())
+        acc: dict = {}
+        for st in per_bucket.values():
+            for k, v in st.items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    acc[k] = v
+                else:
+                    acc[k] = acc.get(k, 0) + v
+        return acc
+
+    def _fold_memory_into(self, acc: dict, st: dict) -> None:
+        for k, v in st.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                acc[k] = v
+            elif k in self._MEM_MAX:
+                acc[k] = max(acc.get(k, 0), v)
+            else:
+                acc[k] = acc.get(k, 0) + v
+
+    def _blocks_needed(self, bucket: int, gen: int) -> int:
+        from repro.serve.paged import blocks_needed
+
+        return blocks_needed(bucket, gen, self.seg_len, self.paged.block_len,
+                             window=self.kernels.cfg.window or 0,
+                             max_seq=self._max_seq(bucket))
+
+    def _pool_capacity(self, bucket: int) -> int:
+        from repro.serve.paged import pool_capacity
+
+        return pool_capacity(self.paged, self.max_batch,
+                             self._max_seq(bucket),
+                             self.kernels.cfg.window or 0)
 
     def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
         """Stop accepting requests.  ``drain=True`` serves everything
@@ -334,6 +428,12 @@ class InferenceServer:
             grp = self._groups[bucket]
             self._advance_group(grp, now)
             if grp.dead or (grp.idle() and not self._pending.get(bucket)):
+                if isinstance(grp, PagedBatchGroup):
+                    grp.detach()  # pool + prefix cache outlive the group
+                else:
+                    self._fold_memory_into(
+                        self._mem_totals.setdefault(bucket, {}),
+                        grp.memory_stats())
                 del self._groups[bucket]
         # 2. form new groups for buckets whose window expired / filled.
         timer = None
@@ -343,9 +443,19 @@ class InferenceServer:
             oldest = min(r.handle.t_arrival for r in q)
             expires = oldest + self.max_wait_s
             if len(q) >= self.max_batch or now >= expires or self._closing:
-                grp = BatchGroup(self.kernels, self.runtime, self.scheduler,
-                                 bucket, self.max_batch, self.seg_len,
-                                 self._max_seq(bucket))
+                if self.paged is not None:
+                    from repro.serve.paged import PoolState
+
+                    state = self._pool_states.setdefault(bucket, PoolState())
+                    grp = PagedBatchGroup(self.kernels, self.runtime,
+                                          self.scheduler, bucket,
+                                          self.max_batch, self.seg_len,
+                                          self._max_seq(bucket), self.paged,
+                                          state)
+                else:
+                    grp = BatchGroup(self.kernels, self.runtime,
+                                     self.scheduler, bucket, self.max_batch,
+                                     self.seg_len, self._max_seq(bucket))
                 self._groups[bucket] = grp
                 self._board(grp, now)
             else:
@@ -387,7 +497,7 @@ class InferenceServer:
             for slot, req in grp.active():
                 if req.remaining() <= 0:
                     self._retire(req)
-                    grp.slots[slot] = None
+                    grp.release_slot(slot)
         # Starting a prefill wave touches no group mirrors — it overlaps a
         # running segment so joiners are ready at the next boundary.
         if grp.prefill_handle is None:
@@ -398,20 +508,38 @@ class InferenceServer:
     def _board(self, grp: BatchGroup, now: float) -> None:
         """Start a prefill wave for as many pending requests as there are
         free slots, EDF order, re-checking each deadline against the
-        forecast of the work *now* remaining."""
+        forecast of the work *now* remaining.  With a paged pool, boarding
+        additionally requires the pool to cover the request's forecast
+        depth in blocks — otherwise the request is *deferred* (left queued,
+        EDF order intact) until exits free blocks, never allowed to corrupt
+        a live slot by overcommitting."""
         q = self._pending.get(grp.bucket)
         if not q:
             return
         free = len(grp.free_slots())
         wave: List[_Request] = []
+        reserved = 0
         while q and len(wave) < free:
-            req = q.pop(0)
-            if not self.admission.admit(now, req.deadline, grp.bucket,
-                                        segments_for(req.gen, self.seg_len)):
+            # Deadline admission first: a doomed head request must be culled
+            # (popped + rejected) even when the pool cannot board it — a
+            # memory deferral would otherwise park it at the head of the EDF
+            # queue and starve feasible requests queued behind it.
+            if not self.admission.admit(now, q[0].deadline, grp.bucket,
+                                        segments_for(q[0].gen, self.seg_len)):
+                req = q.pop(0)
                 self._stats["rejected"] += 1
                 req.handle._reject("deadline unreachable at boarding time")
                 continue
+            if not self.pool_admission.admit_board(
+                    grp.reserve_estimate(q[0]),
+                    grp.memory_available(reserved)):
+                if not q[0].deferred:  # count requests, not wake-ups
+                    q[0].deferred = True
+                    self._stats["deferred"] += 1
+                break
+            req = q.pop(0)
             req.handle.t_admitted = time.monotonic()
+            reserved += grp.reserve_estimate(req)
             wave.append(req)
         if wave:
             self._stats["prefill_waves"] += 1

@@ -13,7 +13,12 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.kernels import ref
-from repro.kernels.ops import flash_decode, flash_decode_xla, needed_tiles
+from repro.kernels.ops import (
+    flash_decode,
+    flash_decode_paged,
+    flash_decode_xla,
+    needed_tiles,
+)
 from repro.models import get_model
 from repro.models import params as P
 
@@ -74,6 +79,88 @@ def test_parity_and_row_bit_identity(kv, cache_dtype, window, s, block_k, pos):
                                block_k=block_k)
         np.testing.assert_allclose(np.asarray(one[0]), np.asarray(got_xla[i]),
                                    atol=1e-6)
+
+
+def as_pool(k, v, kpos, bl, seed=0):
+    """Scatter a contiguous ragged cache into a block pool with a random
+    physical permutation: pool k/v/kpos of (N, bl, ...) plus (B, nmax)
+    block tables.  Blocks 0 (sink) and 1 (null, kpos −1) stay reserved, and
+    one extra unreserved table column resolves to the null block —
+    exercising exactly the layout the paged serving path builds."""
+    b, s = kpos.shape
+    nmax = s // bl
+    rng = np.random.default_rng(seed)
+    n = b * nmax + 2
+    perm = rng.permutation(np.arange(2, n))
+    tables = np.ones((b, nmax + 1), np.int32)  # extra col -> null block
+    kp = np.full((n, bl), -1, np.int32)
+    kpool = np.zeros((n, bl) + k.shape[2:], np.asarray(k).dtype)
+    vpool = np.zeros_like(kpool)
+    knp, vnp, kpnp = np.asarray(k), np.asarray(v), np.asarray(kpos)
+    for i in range(b):
+        for t in range(nmax):
+            ph = perm[i * nmax + t]
+            tables[i, t] = ph
+            kpool[ph] = knp[i, t * bl:(t + 1) * bl]
+            vpool[ph] = vnp[i, t * bl:(t + 1) * bl]
+            kp[ph] = kpnp[i, t * bl:(t + 1) * bl]
+    return (jnp.asarray(kpool), jnp.asarray(vpool), jnp.asarray(kp),
+            jnp.asarray(tables))
+
+
+@pytest.mark.parametrize("kv", [4, 2, 1])  # GQA ratios 1, 2, 4 (h = 4)
+@pytest.mark.parametrize("window,s,bl,pos", [
+    (0, 48, 16, (-1, 0, 15, 16, 17, 47)),
+    (0, 32, 8, (5, 31)),
+    (8, 16, 8, (-1, 3, 15, 40)),   # rolling-window ring in blocks
+])
+def test_paged_kernel_parity(kv, window, s, bl, pos):
+    """Block-table indirection adds zero numerical change: the paged kernel
+    is bit-identical to the contiguous kernel at the same tile size (and so
+    inherits its proven parity with the dense oracle), rows are batch-
+    invariant, and unreserved table entries (null block) are exact no-ops."""
+    b, h, hd = len(pos), 4, 16
+    q = jax.random.normal(KEY, (b, 1, h, hd), jnp.float32)
+    k, v, kpos = ragged_cache(19, b, s, kv, hd, pos, window, jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+    kpool, vpool, kp, tables = as_pool(k, v, kpos, bl)
+    want = flash_decode(q, k, v, kpos, posv, window=window, block_k=bl,
+                        interpret=True)
+    got = flash_decode_paged(q, kpool, vpool, kp, tables, posv,
+                             window=window, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.flash_decode_ref(q, k, v, kpos, posv, window=window)),
+        atol=2e-5,
+    )
+    for i, p in enumerate(pos):
+        if p < 0:
+            assert not np.any(np.asarray(got[i]))
+        one = flash_decode_paged(q[i:i + 1], kpool, vpool, kp,
+                                 tables[i:i + 1], posv[i:i + 1],
+                                 window=window, interpret=True)
+        np.testing.assert_array_equal(np.asarray(one[0]), np.asarray(got[i]))
+
+
+def test_paged_gather_dense_matches_contiguous_dense():
+    """serving's default paged path: gathering the pool through the table
+    then running the SAME dense ragged kernel is bit-identical to the
+    contiguous dense path (the gather is a pure permutation)."""
+    from repro.models.attention import _paged_dense, _ragged_dense
+
+    b, s, kv, hd, bl = 3, 24, 2, 8, 4
+    pos = (0, 7, 23)
+    q = jax.random.normal(KEY, (b, 1, 4, hd), jnp.float32)
+    k, v, kpos = ragged_cache(23, b, s, kv, hd, pos, 0, jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+    kpool, vpool, kp, tables = as_pool(k, v, kpos, bl)
+    cache = {"k": kpool, "v": vpool, "pos": kp, "table": tables}
+    got = _paged_dense(q, cache, posv)
+    want = _ragged_dense(q, k, v, kpos, posv)
+    # The paged table carries one extra null-backed column (s + bl logical
+    # positions): all-masked columns are exact no-ops in the dense kernel.
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_needed_tiles_math():
