@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract):
                        server under an offered-load sweep
   - decode           : derived = ragged-vs-dense decode-attention speedup
                        per (cache depth, slot occupancy) cell
+  - spec             : derived = speculative-vs-sequential decode speedup
+                       per (draft depth k, acceptance rate alpha) cell
   - roofline         : derived = roofline fraction per (arch, shape) cell
 
 Also writes ``BENCH_coexec.json`` (balance / efficiency / overhead),
@@ -24,6 +26,12 @@ successive PRs have a perf trajectory to diff against.
 
 Fast mode (default) uses reduced iteration counts so the full suite runs in
 minutes on the CI container; ``--full`` reproduces the paper-scale settings.
+
+``--baseline BENCH_x.json ...`` turns the run into a regression gate: the
+named committed reports are snapshotted *before* the benchmarks overwrite
+them, and every ``tokens_per_s`` metric in the fresh output is compared
+against its committed value — any cell more than 20% slower fails the run
+(exit 1).
 """
 from __future__ import annotations
 
@@ -246,6 +254,97 @@ def decode_bench(rows: list[str], full: bool,
         json.dump(out, f, indent=2, sort_keys=True)
 
 
+def spec_bench(rows: list[str], full: bool,
+               json_path: str = "BENCH_decode.json") -> None:
+    """Speculative decoding on the multi-row verify path: tokens/s vs the
+    plain one-token decode chain across (draft depth k, acceptance rate
+    alpha) with a scripted-oracle draft, plus the real self-draft row.
+    Merges under the ``spec`` key of ``BENCH_decode.json`` (so run it after
+    the ``decode`` table, which rewrites that file)."""
+    from benchmarks import spec as SP
+
+    out = SP.run(full=full)
+    for r in out["sweep"]:
+        tag = f"k{r['k']}_a{r['alpha']:g}"
+        rows.append(f"spec_{tag},{1e6 / r['tokens_per_s']:.1f},"
+                    f"{r['speedup']:.2f}")
+    sd = out["self_draft"]
+    rows.append(f"spec_self_k{sd['k']},{1e6 / sd['tokens_per_s']:.1f},"
+                f"{sd['speedup']:.2f}")
+    try:
+        with open(json_path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {}
+    doc["spec"] = out
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+
+# Keys that identify a sweep cell (used to build stable baseline labels for
+# list entries, so reordering a sweep cannot mispair cells).
+_ID_KEYS = ("rate_rps", "deadline_s", "kv_mode", "depth", "occupancy",
+            "k", "alpha")
+
+
+def _walk_tokens_per_s(obj, prefix: str = "") -> dict[str, float]:
+    """Flatten every numeric ``*tokens_per_s*`` metric in a BENCH report to
+    a stable ``path.key`` -> value map."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for key in sorted(obj):
+            v = obj[key]
+            if isinstance(v, (int, float)) and "tokens_per_s" in key:
+                out[f"{prefix}{key}"] = float(v)
+            elif isinstance(v, (dict, list)):
+                out.update(_walk_tokens_per_s(v, f"{prefix}{key}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            tag = str(i)
+            if isinstance(v, dict):
+                ids = [f"{kk}={v[kk]}" for kk in _ID_KEYS if kk in v]
+                if ids:
+                    tag = ",".join(ids)
+            out.update(_walk_tokens_per_s(v, f"{prefix}[{tag}]."))
+    return out
+
+
+def load_baselines(paths: list[str]) -> dict[str, dict[str, float]]:
+    """Snapshot committed throughput metrics before the run overwrites the
+    report files in place."""
+    snaps = {}
+    for p in paths:
+        with open(p) as f:
+            snaps[p] = _walk_tokens_per_s(json.load(f))
+    return snaps
+
+
+def check_baselines(snaps: dict[str, dict[str, float]],
+                    tol: float = 0.20) -> list[str]:
+    """Compare freshly written reports against the committed snapshots:
+    returns one failure line per tokens/s metric > ``tol`` below baseline.
+    Cells present only on one side are skipped (sweeps may grow/shrink)."""
+    fails = []
+    for p, base in snaps.items():
+        try:
+            with open(p) as f:
+                fresh = _walk_tokens_per_s(json.load(f))
+        except (FileNotFoundError, json.JSONDecodeError):
+            fails.append(f"{p}: not regenerated by this run")
+            continue
+        for key, want in sorted(base.items()):
+            got = fresh.get(key)
+            if got is None or want <= 0:
+                continue
+            if got < (1.0 - tol) * want:
+                fails.append(
+                    f"{p}:{key}: {got:.1f} tokens/s is "
+                    f"{100 * (1 - got / want):.0f}% below baseline "
+                    f"{want:.1f} (tolerance {tol:.0%})"
+                )
+    return fails
+
+
 def _timed(fn, *args) -> float:
     t0 = time.perf_counter()
     fn(*args)
@@ -269,7 +368,7 @@ def roofline(rows: list[str]) -> None:
 
 
 KNOWN_TABLES = ("usability", "overhead", "coexec", "async", "pipeline",
-                "serve", "decode", "roofline")
+                "serve", "decode", "spec", "roofline")
 
 
 def main() -> None:
@@ -287,6 +386,10 @@ def main() -> None:
                     help="machine-readable serving load-sweep report")
     ap.add_argument("--decode-json", default="BENCH_decode.json",
                     help="machine-readable ragged-decode sweep report")
+    ap.add_argument("--baseline", nargs="*", default=[],
+                    help="committed BENCH_*.json files to gate against: "
+                         "fail (exit 1) if any fresh tokens_per_s metric "
+                         "regresses >20%% vs its committed value")
     args = ap.parse_args()
 
     unknown = sorted(set(args.tables) - set(KNOWN_TABLES))
@@ -295,6 +398,9 @@ def main() -> None:
         # empty CSV a CI step would happily wave through.
         ap.error(f"unknown table(s) {', '.join(unknown)}; "
                  f"known: {', '.join(KNOWN_TABLES)}")
+
+    # Snapshot committed baselines BEFORE any table overwrites them in place.
+    baselines = load_baselines(args.baseline)
 
     rows: list[str] = ["name,us_per_call,derived"]
     report: dict = {}
@@ -313,6 +419,8 @@ def main() -> None:
         serve_bench(rows, args.full, json_path=args.serve_json)
     if "decode" in args.tables:
         decode_bench(rows, args.full, json_path=args.decode_json)
+    if "spec" in args.tables:
+        spec_bench(rows, args.full, json_path=args.decode_json)
     if "roofline" in args.tables:
         roofline(rows)
     print("\n".join(rows))
@@ -320,6 +428,14 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")  # after the CSV block: stdout contract
+    if baselines:
+        fails = check_baselines(baselines)
+        if fails:
+            print("# BASELINE REGRESSION:")
+            print("\n".join(f"#   {f}" for f in fails))
+            raise SystemExit(1)
+        n = sum(len(v) for v in baselines.values())
+        print(f"# baseline check passed ({n} tokens/s metrics within 20%)")
 
 
 if __name__ == "__main__":

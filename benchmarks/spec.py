@@ -1,0 +1,211 @@
+"""Speculative-decoding sweep: verify-step throughput vs draft depth and
+acceptance rate, against the plain one-token-per-step decode chain.
+
+The question the sweep answers is *how much the multi-row verify step buys*
+as a function of the two knobs that govern it: draft depth ``k`` (rows per
+verify) and acceptance rate ``alpha`` (how many of those rows stick).  To
+measure that without confounding it with any particular draft model's
+quality or cost, the draft is a **scripted oracle**: the true greedy
+continuation is precomputed once with the plain chain, and each step's
+``k`` candidates are read from it, corrupted at rate ``1 - alpha`` (a
+corrupted candidate is off by one, so it can never equal the target's
+argmax — acceptance is *exactly* scripted, per token).  The oracle costs
+nothing per step, so each (k, alpha) cell isolates the verify-side
+economics: tokens/step rises as ``1 + alpha*k`` while step cost rises far
+slower (the weight matmuls that dominate decode are batch-amortized across
+the k+1 rows).
+
+A separate ``self_draft`` row runs the *real* ``make_draft_verify_step``
+with the target model drafting for itself (acceptance ~1, but the draft
+costs a full model step per candidate) — the plumbing-overhead bound for a
+draft as expensive as its target; real deployments sit between it and the
+oracle.
+
+Emits the ``spec`` section of ``BENCH_decode.json`` via
+``benchmarks/run.py --tables spec``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ARCH = "internlm2-20b"
+
+
+def _setup():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    from repro.models.params import materialize
+
+    cfg = reduced(get_config(ARCH))
+    api = get_model(cfg)
+    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return cfg, api, params
+
+
+def _timed_best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(full: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.step import (
+        cast_params_cached,
+        make_decode_chain,
+        make_draft_verify_step,
+        make_prefill_step,
+        zeros_cache,
+    )
+
+    cfg, api, params = _setup()
+    b, s = 4, 16
+    n_steps = 32 if full else 16       # speculative verify steps per run
+    ks = (1, 2, 4)
+    alphas = (0.0, 0.5, 1.0)
+    reps = 5 if full else 3
+    kmax = max(ks)
+    max_seq = s + n_steps * (kmax + 1) + kmax + 2
+
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(1, cfg.vocab, size=(b, s)), jnp.int32)
+    prefill = jax.jit(make_prefill_step(cfg, api))
+    chain = jax.jit(make_decode_chain(cfg, api), static_argnums=(4,),
+                    donate_argnums=(1,))
+
+    def fresh():
+        cache = zeros_cache(cfg, api, b, max_seq)
+        tok, cache = prefill(params, {"tokens": prompts}, cache)
+        return tok, cache
+
+    # ---- baseline: plain chain, 1 token per step -------------------------
+    n_base = n_steps * 2
+    tok0, cache0 = fresh()
+    toks_ref, _, _ = chain(params, cache0, tok0,
+                           jnp.int32(s), max_seq - s - 1)  # also: oracle seq
+    toks_ref.block_until_ready()
+
+    def run_base():
+        tok, cache = fresh()
+        out, _, _ = chain(params, cache, tok, jnp.int32(s), n_base)
+        out.block_until_ready()
+
+    run_base()  # warm
+    base_s = _timed_best(run_base, reps)
+    base_tps = b * (n_base + 1) / base_s
+
+    # seq[b, t] = token at absolute position t (prompt, then greedy chain).
+    seq = jnp.concatenate([prompts, tok0, toks_ref], axis=1)
+
+    # ---- oracle sweep ----------------------------------------------------
+    def make_oracle(k: int):
+        """jit-once per k: (params, cache, tok, corrupt[n_steps,b,k]) ->
+        (emitted_count, final_pos).  Drafts are gathered from the scripted
+        continuation at each row's own position, then corrupted."""
+        def body(carry, corrupt_t):
+            tok, pos, cache = carry
+            bidx = jnp.arange(b)[:, None]
+            # Candidates for positions pos+1..pos+k, read off the scripted
+            # continuation; a corrupted slot is off by one, so it can never
+            # match the target's argmax there.
+            cols = pos[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)
+            drafts = seq[bidx, cols]
+            drafts = jnp.where(corrupt_t, (drafts + 1) % cfg.vocab, drafts)
+            xs = jnp.concatenate([tok, drafts], axis=1)
+            logits, cache = api.decode(cast_params_cached(params, cfg.compute_dtype),
+                                       xs, pos, cfg, cache)
+            y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            match = drafts == y[:, :k]
+            acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+            cnt = acc + 1
+            tok2 = y[jnp.arange(b), acc][:, None]
+            return (tok2, pos + cnt, cache), cnt
+
+        def sweep(tok, cache, corrupt):
+            pos = jnp.full((b,), s, jnp.int32)
+            (_, pos, _), cnts = jax.lax.scan(body, (tok, pos, cache), corrupt)
+            return jnp.sum(cnts), pos
+
+        return jax.jit(sweep, donate_argnums=(1,))
+
+    sweep_rows = []
+    for k in ks:
+        oracle = make_oracle(k)
+        for alpha in alphas:
+            crng = np.random.RandomState(17)
+            corrupt = jnp.asarray(crng.random((n_steps, b, k)) >= alpha)
+            tok, cache = fresh()
+            total, _ = oracle(tok, cache, corrupt)  # warm
+            total.block_until_ready()
+            emitted = int(total) + b  # + the prefill token per slot
+
+            def run_spec():
+                t, c = fresh()
+                tot, _ = oracle(t, c, corrupt)
+                tot.block_until_ready()
+
+            spec_s = _timed_best(run_spec, reps)
+            tps = emitted / spec_s
+            sweep_rows.append({
+                "k": k,
+                "alpha": alpha,
+                "tokens_per_step": (emitted - b) / (n_steps * b),
+                "tokens_per_s": tps,
+                "speedup": tps / base_tps,
+            })
+
+    # ---- real self-draft (draft == target: plumbing-overhead bound) ------
+    k = 2
+    step = make_draft_verify_step(cfg, api, cfg, api, k)
+
+    def self_sweep(tok, ptok, cache, dcache):
+        pos = jnp.full((b,), s, jnp.int32)
+
+        def body(carry, _):
+            tok, ptok, pos, cache, dcache = carry
+            _, cnt, tok, ptok, pos, cache, dcache = step(
+                params, params, cache, dcache, tok, ptok, pos)
+            return (tok, ptok, pos, cache, dcache), cnt
+
+        (_, _, pos, _, _), cnts = jax.lax.scan(
+            body, (tok, ptok, pos, cache, dcache), None, length=n_steps)
+        return jnp.sum(cnts)
+
+    self_jit = jax.jit(self_sweep, donate_argnums=(2, 3))
+    ptok0 = prompts[:, -1:]
+
+    def run_self():
+        tok, cache = fresh()
+        _, dcache = fresh()
+        tot = self_jit(tok, ptok0, cache, dcache)
+        tot.block_until_ready()
+        return int(tot)
+
+    emitted = run_self() + b  # warm
+    self_s = _timed_best(run_self, reps)
+    self_tps = emitted / self_s
+
+    return {
+        "arch": ARCH,
+        "batch": b,
+        "n_steps": n_steps,
+        "base_tokens_per_s": base_tps,
+        "sweep": sweep_rows,
+        "self_draft": {
+            "k": k,
+            "tokens_per_s": self_tps,
+            "speedup": self_tps / base_tps,
+            "tokens_per_step": (emitted - b) / (n_steps * b),
+        },
+    }

@@ -49,16 +49,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def needed_tiles(kpos, pos, *, window: int = 0, block_k: int = 128):
+def needed_tiles(kpos, pos, *, window: int = 0, block_k: int = 128,
+                 sq: int = 1):
     """Per-slot KV tile count the ragged kernel touches (the tile-skip math).
 
     ``kpos``: (B, S) recorded positions (−1 = empty); ``pos``: (B,) query
     positions.  Returns (B,) int32 in [1, ceil(S/block_k)]: 1 + the last
     tile index containing any key with ``0 <= kpos <= pos`` (window-masked
     when ``window > 0``); all-empty slots clamp to 1 so the kernel still
-    initializes/finalizes its scratch (the lone tile is fully masked)."""
+    initializes/finalizes its scratch (the lone tile is fully masked).
+
+    ``sq > 1`` (multi-row decode, e.g. speculative verify): the slot's sq
+    query rows sit at consecutive positions ``pos .. pos+sq-1``, so the
+    tile count covers the UNION of the per-row masks — upper bound from the
+    deepest row, window lower bound from the shallowest (a tile a shallow
+    row needs must not be skipped just because the deepest row's window
+    excludes it)."""
     s = kpos.shape[1]
-    valid = _mask(kpos, pos[:, None], window)
+    valid = _mask(kpos, pos[:, None] + (sq - 1), 0)
+    if window > 0:
+        valid &= kpos > pos[:, None] - window
     tile = (jnp.arange(s, dtype=jnp.int32) // block_k)[None, :]
     last = jnp.max(jnp.where(valid, tile, -1), axis=1)
     return jnp.maximum(last + 1, 1).astype(jnp.int32)
@@ -74,7 +84,8 @@ def _mask(kp, pos_b, window: int):
 
 
 def _kernel(nt_ref, pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, window: int, nk: int, scale: float):
+            m_scr, l_scr, acc_scr, *, window: int, nk: int, scale: float,
+            n_rep: int):
     bi = pl.program_id(0)
     ki = pl.program_id(2)
 
@@ -86,19 +97,25 @@ def _kernel(nt_ref, pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
 
     @pl.when(ki < nt_ref[bi])
     def _compute():
-        q = q_ref[0, 0]  # (n_rep, hd)
+        q = q_ref[0, 0]  # (rows, hd), rows = sq*n_rep
+        rows = q.shape[0]
         k = k_ref[0, :, 0, :].astype(q.dtype)  # (bk, hd) — cache_dtype cast
         v = v_ref[0, :, 0, :].astype(q.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale  # (n_rep, bk)
-        valid = _mask(kpos_ref[0, :], pos_ref[bi], window)
-        s = jnp.where(valid[None, :], s, NEG_INF)
+        ) * scale  # (rows, bk)
+        # Row r belongs to query token r // n_rep (multi-row decode: the
+        # slot's sq query tokens sit at consecutive positions, each masked
+        # at its own depth).  sq == 1 collapses to a uniform row mask.
+        j = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // n_rep
+        rowpos = pos_ref[bi] + j  # (rows, 1)
+        valid = _mask(kpos_ref[0, :][None, :], rowpos, window)  # (rows, bk)
+        s = jnp.where(valid, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
         # Mask p explicitly (not via exp underflow): an all-masked tile has
         # m_new == NEG_INF and exp(s - m_new) == 1, which must not count.
-        p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
         pv = jax.lax.dot_general(
@@ -128,19 +145,29 @@ def _pad_cache(k, v, kpos, bk):
 @functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
 def flash_decode(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128,
                  interpret: bool = False):
-    """q: (B,1,H,hd); k/v: (B,S,KV,hd) with H % KV == 0 (any storage dtype);
+    """q: (B,Sq,H,hd); k/v: (B,S,KV,hd) with H % KV == 0 (any storage dtype);
     kpos: (B,S) int32 recorded positions; pos: (B,) int32 query positions.
-    Returns (B,1,H,hd) in q.dtype."""
+    Returns (B,Sq,H,hd) in q.dtype.
+
+    Sq > 1 is the multi-row (speculative-verify) mode: the Sq query tokens
+    of a slot sit at consecutive positions ``pos .. pos+Sq-1`` and are
+    folded into the GQA row axis — q is viewed as (B, KV, Sq·n_rep, hd) and
+    each row masks the shared K tile at its own depth.  One kernel call
+    scores all candidate rows; Sq == 1 reduces bit-exactly to the original
+    single-token layout."""
     b, sq, h, hd = q.shape
-    assert sq == 1, f"decode kernel takes one query token, got Sq={sq}"
     kv = k.shape[2]
     n_rep = h // kv
+    rows = sq * n_rep
     bk = min(block_k, k.shape[1])
     k, v, kpos = _pad_cache(k, v, kpos, bk)
     nk = k.shape[1] // bk
     pos = jnp.asarray(pos, jnp.int32)
-    nt = needed_tiles(kpos, pos, window=window, block_k=bk)
-    qg = q[:, 0].reshape(b, kv, n_rep, hd)
+    nt = needed_tiles(kpos, pos, window=window, block_k=bk, sq=sq)
+    # (B, Sq, H, hd) -> (B, KV, Sq*n_rep, hd): row r = query r//n_rep,
+    # rep r%n_rep — pure layout, bitwise q[:, 0].reshape(...) at Sq == 1.
+    qg = (q.reshape(b, sq, kv, n_rep, hd)
+          .transpose(0, 2, 1, 3, 4).reshape(b, kv, rows, hd))
 
     def kv_idx(bi, gi, ki, nt, pos):
         # Clamp beyond the slot's needed tiles: same block as the previous
@@ -151,37 +178,40 @@ def flash_decode(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128,
         num_scalar_prefetch=2,
         grid=(b, kv, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, n_rep, hd), lambda bi, gi, ki, nt, pos: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, 1, rows, hd), lambda bi, gi, ki, nt, pos: (bi, gi, 0, 0)),
             pl.BlockSpec((1, bk, 1, hd), kv_idx),
             pl.BlockSpec((1, bk, 1, hd), kv_idx),
             pl.BlockSpec((1, bk), lambda bi, gi, ki, nt, pos: (bi, jnp.minimum(ki, nt[bi] - 1))),
         ],
-        out_specs=pl.BlockSpec((1, 1, n_rep, hd), lambda bi, gi, ki, nt, pos: (bi, gi, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, rows, hd), lambda bi, gi, ki, nt, pos: (bi, gi, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((n_rep,), jnp.float32),
-            pltpu.VMEM((n_rep,), jnp.float32),
-            pltpu.VMEM((n_rep, hd), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
         ],
     )
-    kernel = functools.partial(_kernel, window=window, nk=nk, scale=hd ** -0.5)
+    kernel = functools.partial(_kernel, window=window, nk=nk, scale=hd ** -0.5,
+                               n_rep=n_rep)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, n_rep, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rows, hd), q.dtype),
         interpret=interpret,
     )(nt, pos, qg, k, v, kpos)
-    return out.reshape(b, 1, h, hd)
+    return (out.reshape(b, kv, sq, n_rep, hd)
+            .transpose(0, 2, 1, 3, 4).reshape(b, sq, h, hd))
 
 
 def _paged_kernel(nt_ref, pos_ref, tbl_ref, q_ref, k_ref, v_ref, kpos_ref,
                   o_ref, m_scr, l_scr, acc_scr, *, window: int, nk: int,
-                  scale: float):
+                  scale: float, n_rep: int):
     # The block table is consumed entirely by the index_maps (it addresses
     # HBM blocks); the compute body is the contiguous kernel verbatim — the
     # paged kernel differs only in WHERE a logical tile's bytes live.
     del tbl_ref
     _kernel(nt_ref, pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
-            m_scr, l_scr, acc_scr, window=window, nk=nk, scale=scale)
+            m_scr, l_scr, acc_scr, window=window, nk=nk, scale=scale,
+            n_rep=n_rep)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -207,9 +237,9 @@ def flash_decode_paged(q, k, v, kpos, tables, pos, *, window: int = 0,
     bit-identity contract survives physical-block indirection.
     """
     b, sq, h, hd = q.shape
-    assert sq == 1, f"decode kernel takes one query token, got Sq={sq}"
     kv = k.shape[2]
     n_rep = h // kv
+    rows = sq * n_rep
     bl = k.shape[1]  # pool layout: (n_blocks, block_len, KV, hd)
     nmax = tables.shape[1]
     tables = jnp.asarray(tables, jnp.int32)
@@ -218,8 +248,9 @@ def flash_decode_paged(q, k, v, kpos, tables, pos, *, window: int = 0,
     # kernel — the same tile-skip math as the contiguous path, applied to
     # the table-resolved view of each slot's timeline.
     kpos_log = kpos[tables].reshape(b, nmax * bl)
-    nt = needed_tiles(kpos_log, pos, window=window, block_k=bl)
-    qg = q[:, 0].reshape(b, kv, n_rep, hd)
+    nt = needed_tiles(kpos_log, pos, window=window, block_k=bl, sq=sq)
+    qg = (q.reshape(b, sq, kv, n_rep, hd)
+          .transpose(0, 2, 1, 3, 4).reshape(b, kv, rows, hd))
 
     def kv_idx(bi, gi, ki, nt, pos, tbl):
         # Clamp to the slot's needed tiles FIRST (contiguous kernel's ragged
@@ -230,7 +261,7 @@ def flash_decode_paged(q, k, v, kpos, tables, pos, *, window: int = 0,
         num_scalar_prefetch=3,
         grid=(b, kv, nmax),
         in_specs=[
-            pl.BlockSpec((1, 1, n_rep, hd),
+            pl.BlockSpec((1, 1, rows, hd),
                          lambda bi, gi, ki, nt, pos, tbl: (bi, gi, 0, 0)),
             pl.BlockSpec((1, bl, 1, hd), kv_idx),
             pl.BlockSpec((1, bl, 1, hd), kv_idx),
@@ -238,23 +269,24 @@ def flash_decode_paged(q, k, v, kpos, tables, pos, *, window: int = 0,
                          lambda bi, gi, ki, nt, pos, tbl:
                          (tbl[bi, jnp.minimum(ki, nt[bi] - 1)], 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
+        out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda bi, gi, ki, nt, pos, tbl: (bi, gi, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((n_rep,), jnp.float32),
-            pltpu.VMEM((n_rep,), jnp.float32),
-            pltpu.VMEM((n_rep, hd), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
         ],
     )
     kernel = functools.partial(_paged_kernel, window=window, nk=nmax,
-                               scale=hd ** -0.5)
+                               scale=hd ** -0.5, n_rep=n_rep)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, n_rep, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rows, hd), q.dtype),
         interpret=interpret,
     )(nt, pos, tables, qg, k, v, kpos)
-    return out.reshape(b, 1, h, hd)
+    return (out.reshape(b, kv, sq, n_rep, hd)
+            .transpose(0, 2, 1, 3, 4).reshape(b, sq, h, hd))
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k"))
@@ -264,14 +296,16 @@ def flash_decode_xla(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128)
     and cache reads scale with actual occupancy depth, not cache capacity.
     Same signature and zero-for-empty-slot contract as ``flash_decode``."""
     b, sq, h, hd = q.shape
-    assert sq == 1
     kv = k.shape[2]
     n_rep = h // kv
+    rows = sq * n_rep
     bk = min(block_k, k.shape[1])
     k, v, kpos = _pad_cache(k, v, kpos, bk)
     pos = jnp.asarray(pos, jnp.int32)
-    n_hi = jnp.max(needed_tiles(kpos, pos, window=window, block_k=bk))
-    qg = q[:, 0].reshape(b, kv, n_rep, hd)
+    n_hi = jnp.max(needed_tiles(kpos, pos, window=window, block_k=bk, sq=sq))
+    qg = (q.reshape(b, sq, kv, n_rep, hd)
+          .transpose(0, 2, 1, 3, 4).reshape(b, kv, rows, hd))
+    rowpos = pos[:, None] + jnp.arange(rows, dtype=jnp.int32) // n_rep  # (B, rows)
     scale = hd ** -0.5
 
     def cond(carry):
@@ -284,7 +318,7 @@ def flash_decode_xla(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128)
         kp = jax.lax.dynamic_slice_in_dim(kpos, i * bk, bk, 1)  # (B, bk)
         s = jnp.einsum("bgrd,bkgd->bgrk", qg, kb,
                        preferred_element_type=jnp.float32) * scale
-        valid = _mask(kp, pos[:, None], window)[:, None, None, :]
+        valid = _mask(kp[:, None, :], rowpos[:, :, None], window)[:, None]
         s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
@@ -295,9 +329,10 @@ def flash_decode_xla(q, k, v, kpos, pos, *, window: int = 0, block_k: int = 128)
             preferred_element_type=jnp.float32)
         return i + 1, m_new, l, acc
 
-    m0 = jnp.full((b, kv, n_rep), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, kv, n_rep), jnp.float32)
-    a0 = jnp.zeros((b, kv, n_rep, hd), jnp.float32)
+    m0 = jnp.full((b, kv, rows), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, rows), jnp.float32)
+    a0 = jnp.zeros((b, kv, rows, hd), jnp.float32)
     _, _, l, acc = jax.lax.while_loop(cond, body, (jnp.int32(0), m0, l0, a0))
     out = acc / jnp.maximum(l[..., None], 1e-30)
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+    return (out.reshape(b, kv, sq, n_rep, hd)
+            .transpose(0, 2, 1, 3, 4).reshape(b, sq, h, hd).astype(q.dtype))

@@ -28,10 +28,15 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0, q_offs
 
 
 def flash_decode_ref(q, k, v, kpos, pos, *, window: int = 0):
-    """Dense ragged-decode oracle. q: (B,1,H,hd); k/v: (B,S,KV,hd) (any
+    """Dense ragged-decode oracle. q: (B,Sq,H,hd); k/v: (B,S,KV,hd) (any
     storage dtype); kpos: (B,S) recorded positions (−1 = empty); pos: (B,)
     per-slot query positions.  Attends every key with ``0 <= kpos <= pos``
     (window-masked when set); a slot with no valid keys returns zeros.
+
+    Sq > 1 is the k-row (speculative-verify) mode: the slot's Sq query
+    tokens sit at consecutive positions ``pos .. pos+Sq-1`` and each row
+    masks at its own depth — the same per-row contract as the multi-row
+    Pallas kernel.
 
     One definition shared with serving's dense fallback
     (``models.attention._ragged_dense``): the kernel parity suite then

@@ -84,6 +84,30 @@ def run_coexec(cfg, api, params, batch, args) -> np.ndarray:
     return out
 
 
+def _make_draft(cfg, params, args):
+    """Resolve ``--draft`` into a DraftSpec: ``self`` re-uses the target
+    params (acceptance ≈ 1 — the co-execution plumbing benchmark),
+    ``reduced`` materializes fresh params of the reduced same-arch config,
+    and any other value names an arch whose reduced config drafts (reduced
+    configs share vocab=256, so cross-arch drafting pairs up)."""
+    from repro.serve import DraftSpec
+
+    if not args.draft:
+        return None
+    if args.draft == "self":
+        return DraftSpec(cfg, params, k=args.draft_k)
+    import dataclasses
+
+    name = args.arch if args.draft == "reduced" else args.draft
+    dcfg = reduced(get_config(name))
+    if args.kernel:
+        dcfg = dataclasses.replace(dcfg, kernel_impl=args.kernel)
+    dapi = get_model(dcfg)
+    dparams = materialize(dapi.param_spec(dcfg, 1),
+                          jax.random.PRNGKey(args.seed + 3), jnp.float32)
+    return DraftSpec(dcfg, dparams, k=args.draft_k)
+
+
 def run_server(cfg, api, params, args) -> None:
     """Replay a seeded Poisson arrival trace through ``InferenceServer``."""
     from repro.serve import PagedSpec
@@ -105,6 +129,7 @@ def run_server(cfg, api, params, args) -> None:
         max_new_cap=max(args.gen, 1),
         max_wait_ms=args.max_wait_ms,
         paged=paged,
+        draft=_make_draft(cfg, params, args),
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
     t0 = time.perf_counter()
@@ -131,6 +156,12 @@ def run_server(cfg, api, params, args) -> None:
         f"{pct}occupancy={s['mean_occupancy']:.2f} "
         f"tokens/s={s['tokens_out'] / wall:.1f}"
     )
+    if s["tokens_drafted"]:
+        print(
+            f"speculation k={args.draft_k}: {s['tokens_accepted']}/"
+            f"{s['tokens_drafted']} draft tokens accepted "
+            f"(acceptance={s['acceptance']:.2f})"
+        )
     mem = s.get("memory", {})
     if mem.get("mode") == "paged":
         print(
@@ -177,6 +208,14 @@ def main() -> None:
                          "+ prefix cache; forces one group + Static)")
     ap.add_argument("--block-len", type=int, default=4,
                     help="tokens per KV block in --paged mode")
+    ap.add_argument("--draft", default="",
+                    help="speculative decoding draft (server mode): 'self' "
+                         "(target params; acceptance ~1), 'reduced' (fresh "
+                         "reduced same-arch params), or an arch name whose "
+                         "reduced config drafts.  Outputs stay bit-identical"
+                         " to one-shot generate (--verify still holds)")
+    ap.add_argument("--draft-k", type=int, default=2,
+                    help="draft tokens proposed per verify step")
     ap.add_argument("--verify", action="store_true",
                     help="assert outputs bit-identical to one-shot generate")
     ap.add_argument("--kernel", default="",

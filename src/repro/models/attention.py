@@ -163,50 +163,59 @@ def pos_vector(pos, b: int):
 
 
 def decode_step(p, x, pos, cfg, cache, *, window=0):
-    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position
-    or a (B,) vector of per-slot positions (native continuous batching).
+    """Decode step. x: (B, Sq, d); pos: scalar int32 absolute position or a
+    (B,) vector of per-slot positions (native continuous batching).  Sq > 1
+    is the multi-row (speculative-verify) step: the Sq tokens of a slot sit
+    at consecutive positions ``pos .. pos+Sq-1``; all Sq candidate keys are
+    scattered into the cache *before* attention, and each query row masks
+    at its own depth — row j attends exactly the keys the sequential step
+    at ``pos+j`` would, so rows are bit-identical to Sq single-token steps
+    (rollback after rejection is just the pos timeline never advancing over
+    the rejected rows; their stale keys are overwritten by the next step's
+    scatter before anything attends them).
     A cache carrying a ``"table"`` leaf is **paged** (a shared block pool +
     per-slot block tables, see serve.paged): writes scatter through the
     table into physical blocks instead of into a per-slot row."""
-    b = x.shape[0]
+    b, sq = x.shape[0], x.shape[1]
     posv = pos_vector(pos, b)
-    positions = posv[:, None]
+    positions = posv[:, None] + jnp.arange(sq, dtype=jnp.int32)
     q, k, v = _project_qkv(p, x, positions, cfg)
     if "table" in cache:
-        new_cache = _paged_write(cache, k[:, 0], v[:, 0], posv, window)
+        new_cache = _paged_write(cache, k, v, positions, window)
     else:
         cs = cache["k"].shape[1]
-        slot = posv % cs if window else posv
-        bidx = jnp.arange(b)
+        slot = positions % cs if window else positions  # (B, Sq)
+        bidx = jnp.arange(b)[:, None]
         new_cache = {
-            "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype)),
-            "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype)),
-            "pos": cache["pos"].at[bidx, slot].set(posv.astype(cache["pos"].dtype)),
+            "k": cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, slot].set(positions.astype(cache["pos"].dtype)),
         }
     out = cached_attention(q, new_cache, posv, cfg, window=window)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 
 
-def _paged_write(cache, k1, v1, posv, window):
-    """Scatter one token's K/V/pos through the block table.  k1/v1: (B, KV,
-    hd).  Logical index = ``pos`` (full cache) or ``pos % ring`` (rolling:
-    the logical capacity ``nmax*bl`` equals the contiguous ring size by
-    construction, so ring layout — and therefore bit-identity — is
-    preserved).  The tile index is clamped so slots whose position ran past
-    their table (exited slots decoding garbage on static shapes) write into
-    their table's sink entry instead of reading out of bounds."""
+def _paged_write(cache, kt, vt, positions, window):
+    """Scatter Sq tokens' K/V/pos through the block table.  kt/vt: (B, Sq,
+    KV, hd); positions: (B, Sq).  Logical index = ``pos`` (full cache) or
+    ``pos % ring`` (rolling: the logical capacity ``nmax*bl`` equals the
+    contiguous ring size by construction, so ring layout — and therefore
+    bit-identity — is preserved).  The tile index is clamped so slots whose
+    position ran past their table (exited slots decoding garbage on static
+    shapes) write into their table's sink entry instead of reading out of
+    bounds."""
     bl = cache["k"].shape[1]
     nmax = cache["table"].shape[1]
-    li = posv % (nmax * bl) if window else posv
+    li = positions % (nmax * bl) if window else positions
     blk = jnp.minimum(li // bl, nmax - 1)
-    off = li % bl
-    bidx = jnp.arange(posv.shape[0])
-    phys = cache["table"][bidx, blk]
+    off = li % bl  # (B, Sq)
+    bidx = jnp.arange(positions.shape[0])[:, None]
+    phys = cache["table"][bidx, blk]  # (B, Sq)
     return {
         **cache,
-        "k": cache["k"].at[phys, off].set(k1.astype(cache["k"].dtype)),
-        "v": cache["v"].at[phys, off].set(v1.astype(cache["v"].dtype)),
-        "pos": cache["pos"].at[phys, off].set(posv.astype(cache["pos"].dtype)),
+        "k": cache["k"].at[phys, off].set(kt.astype(cache["k"].dtype)),
+        "v": cache["v"].at[phys, off].set(vt.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[phys, off].set(positions.astype(cache["pos"].dtype)),
     }
 
 
@@ -223,20 +232,24 @@ def ragged_valid_mask(kpos, pos, window: int):
 
 
 def _ragged_dense(q, k, v, kpos, posv, *, window=0):
-    """Dense ragged-decode attention: one query per slot over the cache as
+    """Dense ragged-decode attention: Sq queries per slot over the cache as
     stored, masked by recorded positions, GQA via grouped-head einsum
     reshape (no materialized ``repeat_kv`` — the eager path used to pay
     H/KV× the cache in memory traffic every step).  ``posv``: (B,) per-slot
-    positions.  Rows are independent, so a slot's output is bit-identical
-    whatever batch it shares the einsum with; a slot with no valid keys
-    (pos = −1, empty cache) returns zeros — the same contract as the
-    ``kernels.flash_decode`` Pallas kernel."""
+    positions; Sq > 1 (multi-row decode, e.g. speculative verify) places
+    the slot's query tokens at consecutive positions ``posv .. posv+Sq-1``,
+    each masked at its own depth.  Rows are independent, so a slot's output
+    is bit-identical whatever batch it shares the einsum with; a slot with
+    no valid keys (pos = −1, empty cache) returns zeros — the same contract
+    as the ``kernels.flash_decode`` Pallas kernel."""
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
     qg = q.reshape(b, sq, kvh, h // kvh, hd)
     logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(q.dtype),
                         preferred_element_type=jnp.float32) * (hd ** -0.5)
-    vm = ragged_valid_mask(kpos, posv[:, None], window)[:, None, None, None, :]
+    rowpos = posv[:, None] + jnp.arange(sq, dtype=jnp.int32)  # (B, Sq)
+    vm = ragged_valid_mask(kpos[:, None, :], rowpos[:, :, None],
+                           window)[:, None, None, :, :]
     logits = jnp.where(vm, logits, -1e30)
     m = logits.max(axis=-1, keepdims=True)
     # Mask p explicitly (not via exp underflow): an all-empty slot has
@@ -269,7 +282,8 @@ def flash_decode_attention(q, cache, pos, cfg, *, window=0):
 
     mesh = current_mesh()
     bax = batch_axes(mesh)
-    b, _, h, hd = q.shape
+    b, sq, h, hd = q.shape
+    assert sq == 1, "seq-sharded mesh decode is single-row (no speculative verify)"
     kvh = cache["k"].shape[2]
     n_rep = h // kvh
     scale = cfg.hd ** -0.5

@@ -129,10 +129,19 @@ def rec_block_apply(p, x, cfg, cache=None):
     ck = p["conv_w"].shape[1]
     xc = sum(conv_in[:, i : i + s] * p["conv_w"][:, i] for i in range(ck)) + p["conv_b"]
 
-    # Block-diagonal gates.
+    # Block-diagonal gates, unrolled per block.  The batched-dim einsum
+    # ("bsnw,nwv->bsnv") lowers to a dot_general whose CPU lowering splits
+    # the flattened batch*seq dimension differently per batch size, making
+    # batched decode rows diverge ~1e-7 from the same row at b=1.  Plain
+    # per-block matmuls keep one lowering regardless of batch, so vector-pos
+    # decode rows stay bit-identical to scalar b=1 decode.
     xg = xc.reshape(bsz, s, nb, w // nb)
-    r = jax.nn.sigmoid(jnp.einsum("bsnw,nwv->bsnv", xg, p["gate_a"]) + p["gate_a_b"])
-    i = jax.nn.sigmoid(jnp.einsum("bsnw,nwv->bsnv", xg, p["gate_x"]) + p["gate_x_b"])
+
+    def _block_gates(g, b_):
+        return jnp.stack([xg[:, :, j] @ g[j] for j in range(nb)], axis=2) + b_
+
+    r = jax.nn.sigmoid(_block_gates(p["gate_a"], p["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_gates(p["gate_x"], p["gate_x_b"]))
     r = r.reshape(bsz, s, w).astype(jnp.float32)
     i = i.reshape(bsz, s, w).astype(jnp.float32)
     log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r

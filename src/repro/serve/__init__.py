@@ -9,6 +9,7 @@ from repro.serve.batcher import (  # noqa: F401
     Buckets,
     ModelKernels,
     segments_for,
+    spec_segments_for,
 )
 from repro.serve.paged import (  # noqa: F401
     BlockPool,
@@ -21,11 +22,14 @@ from repro.serve.server import (  # noqa: F401
     InferenceServer,
     RequestHandle,
     ServeError,
+    validate_draft,
 )
 from repro.serve.step import (  # noqa: F401
+    DraftSpec,
     cache_batch_axes,
     make_decode_chain,
     make_decode_step,
+    make_draft_verify_step,
     make_generate,
     make_prefill_step,
     zeros_cache,

@@ -56,6 +56,34 @@ class ServiceModel:
         with self._lock:
             return self._ema.get((kind, bucket))
 
+    # -- speculative decoding ---------------------------------------------
+    def observe_acceptance(self, k: int, rate: float) -> None:
+        """Rolling EMA of the draft acceptance rate (accepted / drafted
+        tokens) at draft depth ``k``, fed per harvested segment."""
+        if not math.isfinite(rate):
+            return
+        rate = min(1.0, max(0.0, rate))
+        key = ("acceptance", int(k))
+        with self._lock:
+            old = self._ema.get(key)
+            self._ema[key] = rate if old is None else (
+                self.alpha * rate + (1 - self.alpha) * old
+            )
+
+    def acceptance(self, k: int) -> Optional[float]:
+        with self._lock:
+            return self._ema.get(("acceptance", int(k)))
+
+    def tokens_per_step(self, k: int) -> float:
+        """Expected tokens a draft-depth-``k`` speculative step emits:
+        ``1 + acceptance * k``.  Cold (or k=0) returns 1.0 — the
+        non-speculative rate — so forecasts degrade to the plain accounting
+        rather than optimistically over-admitting before any evidence."""
+        if k <= 0:
+            return 1.0
+        a = self.acceptance(k)
+        return 1.0 if a is None else 1.0 + a * k
+
 
 class DeadlineAdmission:
     """EDF admission policy: reject requests whose optimistic completion

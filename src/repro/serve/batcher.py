@@ -56,8 +56,10 @@ import jax.numpy as jnp
 
 from repro.core.program import Program
 from repro.serve.step import (
+    DraftSpec,
     cache_batch_axes,
     make_decode_step,
+    make_draft_verify_step,
     make_prefill_step,
     zeros_cache,
 )
@@ -92,13 +94,25 @@ def segments_for(new_tokens: int, seg_len: int) -> int:
     return max(0, math.ceil((new_tokens - 1) / seg_len))
 
 
+def spec_segments_for(new_tokens: int, seg_len: int,
+                      tokens_per_step: float) -> int:
+    """Expected decode segments under speculation: each of a segment's
+    ``seg_len`` draft/verify steps emits ``1 + acceptance * k`` tokens in
+    expectation (1..k+1 guaranteed).  ``tokens_per_step = 1.0`` degrades to
+    :func:`segments_for` exactly — the non-speculative accounting is the
+    zero-acceptance special case, so forecasts stay comparable."""
+    tps = max(1.0, float(tokens_per_step))
+    return max(0, math.ceil((new_tokens - 1) / (seg_len * tps)))
+
+
 class ModelKernels:
     """Per-server kernel factory: every BatchGroup of the same geometry
     shares one kernel *object* per (kind, shape-key), so the per-group jit
     cache (``DeviceGroup.compile_kernel`` keys on kernel identity) survives
     group dissolve/re-form without recompiling."""
 
-    def __init__(self, cfg, api, params) -> None:
+    def __init__(self, cfg, api, params,
+                 draft: Optional[DraftSpec] = None) -> None:
         self.cfg, self.api, self.params = cfg, api, params
         # Batch-axis geometry is max_seq-independent; probe with a tiny cache.
         self.bax = cache_batch_axes(cfg, api, 8)
@@ -106,12 +120,33 @@ class ModelKernels:
         self.treedef = jax.tree_util.tree_structure(self.bax)
         self._seg_fns: dict = {}
         self._prefill_fns: dict = {}
+        self.draft = draft
+        if draft is not None:
+            from repro.models import get_model
+
+            self.dapi = get_model(draft.cfg)
+            self.dbax = cache_batch_axes(draft.cfg, self.dapi, 8)
+            self.dbax_leaves = jax.tree_util.tree_leaves(self.dbax)
+            self.dtreedef = jax.tree_util.tree_structure(self.dbax)
+
+    @property
+    def spec_k(self) -> int:
+        """Draft depth (0 = speculation off)."""
+        return self.draft.k if self.draft is not None else 0
 
     def _leaf_specs(self, max_seq: int) -> list:
         from repro.models.params import Spec
 
         return jax.tree_util.tree_leaves(
             self.api.cache_spec(self.cfg, 1, max_seq, 1),
+            is_leaf=lambda x: isinstance(x, Spec),
+        )
+
+    def _draft_leaf_specs(self, max_seq: int) -> list:
+        from repro.models.params import Spec
+
+        return jax.tree_util.tree_leaves(
+            self.dapi.cache_spec(self.draft.cfg, 1, max_seq, 1),
             is_leaf=lambda x: isinstance(x, Spec),
         )
 
@@ -122,6 +157,20 @@ class ModelKernels:
         out = []
         for s, a in zip(self._leaf_specs(max_seq), self.bax_leaves):
             dt = np.dtype(s.dtype or self.cfg.compute_dtype)
+            shape = s.shape[:a] + s.shape[a + 1:]
+            fill = {"neg_ones": -1, "ones": 1}.get(s.init, 0)
+            out.append(np.full((n_slots,) + shape, fill, dt))
+        return out
+
+    def draft_leaf_mirrors(self, n_slots: int, max_seq: int) -> List[np.ndarray]:
+        """Slot-leading mirrors for the *draft* model's cache.  Always
+        contiguous slot rows — even when the target cache is paged, the
+        draft cache is small (shallow config) and transient (it carries no
+        bit-identity obligation: its staleness only moves the acceptance
+        rate), so paging it would buy nothing."""
+        out = []
+        for s, a in zip(self._draft_leaf_specs(max_seq), self.dbax_leaves):
+            dt = np.dtype(s.dtype or self.draft.cfg.compute_dtype)
             shape = s.shape[:a] + s.shape[a + 1:]
             fill = {"neg_ones": -1, "ones": 1}.get(s.init, 0)
             out.append(np.full((n_slots,) + shape, fill, dt))
@@ -258,6 +307,149 @@ class ModelKernels:
         self._prefill_fns[max_seq] = pre
         return pre
 
+    # ------------------------------------------------- speculative kernels
+    def _spec_step(self):
+        return make_draft_verify_step(self.cfg, self.api, self.draft.cfg,
+                                      self.dapi, self.draft.k)
+
+    def _spec_scan(self, seg_len: int, step, tok, ptok, pos, tcache, dcache):
+        """Shared draft/verify segment body: ``seg_len`` speculative steps,
+        each emitting 1..k+1 tokens, cursor-scattered into one flat
+        ``(b, seg_len*(k+1))`` buffer.  Beyond each slot's final cursor the
+        buffer holds garbage (rejected-row argmaxes) — exactly like the
+        positions past ``need`` in the non-spec ``toks_seg``; harvest only
+        reads ``buf[:cnt]``.  Returns (buf, cnt, tok, ptok, pos, caches)."""
+        k = self.draft.k
+        params, dparams = self.params, self.draft.params
+        b = tok.shape[0]
+        buf = jnp.zeros((b, seg_len * (k + 1)), jnp.int32)
+        cur = jnp.zeros((b,), jnp.int32)
+        bidx = jnp.arange(b)
+
+        def body(carry, _):
+            tok, ptok, pos, cur, tc, dc, buf = carry
+            y, cnt, tok, ptok, pos, tc, dc = step(
+                params, dparams, tc, dc, tok, ptok, pos[:, 0]
+            )
+            # Scatter all k+1 verified rows at the cursor; the accepted
+            # prefix lands at buf[cur:cur+cnt], and the next step's scatter
+            # (at cur+cnt) overwrites the rejected overhang before harvest
+            # can see it mid-buffer.
+            buf = buf.at[bidx[:, None], cur[:, None] + jnp.arange(k + 1)].set(y)
+            return (tok, ptok, pos[:, None], cur + cnt, tc, dc, buf), None
+
+        carry = (tok, ptok, pos, cur, tcache, dcache, buf)
+        (tok, ptok, pos, cur, tcache, dcache, buf), _ = jax.lax.scan(
+            body, carry, None, length=seg_len
+        )
+        return buf, cur[:, None], tok, ptok, pos, tcache, dcache
+
+    def spec_segment_kernel(self, seg_len: int) -> Callable:
+        """Speculative variant of :meth:`segment_kernel`:
+        ``fn(offset, tok, ptok, pos, *target_leaves, *draft_leaves) ->
+        (toks[b, seg_len*(k+1)], cnt[b, 1], tok', ptok', pos', *leaves')``.
+        Each scan step drafts ``k`` candidates and verifies them in one
+        multi-row decode; slots advance 1..k+1 positions per step (ragged
+        tokens-per-step), with ``cnt`` reporting how many of the flat token
+        buffer's entries are real."""
+        key = ("spec", seg_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        step = self._spec_step()
+        treedef, bax = self.treedef, self.bax
+        dtreedef, dbax = self.dtreedef, self.dbax
+        nt = len(self.bax_leaves)
+        tu = jax.tree_util
+
+        def seg(offset, tok, ptok, pos, *leaves):
+            tcache = tu.tree_unflatten(treedef, leaves[:nt])
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
+            dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
+            buf, cnt, tok, ptok, pos, tcache, dcache = self._spec_scan(
+                seg_len, step, tok, ptok, pos, tcache, dcache
+            )
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), tcache, bax)
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), dcache, dbax)
+            return (buf, cnt, tok, ptok, pos,
+                    *tu.tree_leaves(tcache), *tu.tree_leaves(dcache))
+
+        self._seg_fns[key] = seg
+        return seg
+
+    def paged_spec_segment_kernel(self, seg_len: int) -> Callable:
+        """Paged-target speculative segment: ``fn(offset, tok, ptok, pos,
+        table, *pool_leaves, *draft_leaves) -> (toks, cnt, tok', ptok',
+        pos', *pool_leaves', *draft_leaves')``.  The target cache resolves
+        physical blocks through the table exactly as
+        :meth:`paged_segment_kernel`; the draft cache stays contiguous."""
+        key = ("paged_spec", seg_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        step = self._spec_step()
+        treedef, bax = self.treedef, self.bax
+        dtreedef, dbax = self.dtreedef, self.dbax
+        nt = len(self.bax_leaves)
+        n_layers = self.cfg.n_layers
+        tu = jax.tree_util
+
+        def seg(offset, tok, ptok, pos, table, *leaves):
+            tcache = tu.tree_unflatten(treedef, leaves[:nt])
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
+            tcache = dict(tcache)
+            tcache["table"] = jnp.broadcast_to(
+                table[None], (n_layers,) + table.shape
+            )
+            dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
+            buf, cnt, tok, ptok, pos, tcache, dcache = self._spec_scan(
+                seg_len, step, tok, ptok, pos, tcache, dcache
+            )
+            tcache = dict(tcache)
+            tcache.pop("table")
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), tcache, bax)
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), dcache, dbax)
+            return (buf, cnt, tok, ptok, pos,
+                    *tu.tree_leaves(tcache), *tu.tree_leaves(dcache))
+
+        self._seg_fns[key] = seg
+        return seg
+
+    def spec_prefill_kernel(self, max_seq: int) -> Callable:
+        """Prefill for speculative slots: runs the target *and* the draft
+        prefill over the same prompt rows, so a joining slot lands with both
+        caches populated through the prompt.  ``fn(offset, tokens) ->
+        (tok0, ptok0, *target_leaves, *draft_leaves)`` where ``ptok0`` is
+        the padded prompt's last token (position ``bucket - 1``) — the
+        predecessor the first draft step rewrites."""
+        key = ("spec", max_seq)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+        prefill = make_prefill_step(self.cfg, self.api)
+        dprefill = make_prefill_step(self.draft.cfg, self.dapi)
+        cfg, api, params = self.cfg, self.api, self.params
+        dcfg, dparams = self.draft.cfg, self.draft.params
+        dapi, bax, dbax = self.dapi, self.bax_leaves, self.dbax_leaves
+
+        def pre(offset, tokens):
+            b = tokens.shape[0]
+            cache = zeros_cache(cfg, api, b, max_seq)
+            tok, cache = prefill(params, {"tokens": tokens}, cache)
+            dcache = zeros_cache(dcfg, dapi, b, max_seq)
+            _, dcache = dprefill(dparams, {"tokens": tokens}, dcache)
+            ptok = tokens[:, -1:].astype(jnp.int32)
+            tl = [jnp.moveaxis(x, a, 0)
+                  for x, a in zip(jax.tree_util.tree_leaves(cache), bax)]
+            dl = [jnp.moveaxis(x, a, 0)
+                  for x, a in zip(jax.tree_util.tree_leaves(dcache), dbax)]
+            return (tok, ptok, *tl, *dl)
+
+        self._prefill_fns[key] = pre
+        return pre
+
 
 class BatchGroup:
     """One live continuous batch for one bucket.  All mutating methods are
@@ -273,6 +465,7 @@ class BatchGroup:
         self.n_slots = n_slots
         self.seg_len = seg_len
         self.max_seq = max_seq
+        self.spec_k = kernels.spec_k  # draft depth; 0 = speculation off
         self.slots: List[Optional[object]] = [None] * n_slots  # _Request per slot
         self.dead = False
         self.tokens_written = 0  # KV positions actually written (memory_stats)
@@ -294,6 +487,37 @@ class BatchGroup:
         tok = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots, 1), np.int32)
         leaves = kernels.leaf_mirrors(n_slots, self.max_seq)
+        if self.spec_k:
+            # Speculative layout: a predecessor-token buffer joins the
+            # carry (the first draft step re-decodes [ptok, tok] to repair
+            # the draft-cache hole), the draft model's cache mirrors ride
+            # behind the target's on the same donate/swap machinery, and
+            # the token buffer widens to the per-segment emission *cap*
+            # seg_len*(k+1) with a per-slot count of how much is real.
+            k = self.spec_k
+            ptok = np.zeros((n_slots, 1), np.int32)
+            leaves = leaves + kernels.draft_leaf_mirrors(n_slots, self.max_seq)
+            toks_seg = np.zeros((n_slots, seg_len * (k + 1)), np.int32)
+            prog = Program().in_(tok).in_(ptok).in_(pos)
+            for b in leaves:
+                prog.in_(b)
+            prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
+            prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
+            prog.out(np.zeros_like(pos))
+            for b in leaves:
+                prog.out(np.zeros_like(b))
+            prog.kernel(kernels.spec_segment_kernel(seg_len),
+                        f"spec_seg{seg_len}_k{k}")
+            prog.donate(*range(3, 3 + len(leaves)))
+            prog.work_items(n_slots, 1)
+            self.prog = prog
+            self.n_leaves = len(leaves)
+            # toks_seg (out 0) and cnt (out 1) are read-only harvest buffers;
+            # tok/ptok/pos and every cache leaf ping-pong.
+            self._swap_pairs = [(0, 2), (1, 3), (2, 4)] + [
+                (3 + i, 5 + i) for i in range(self.n_leaves)
+            ]
+            return
         toks_seg = np.zeros((n_slots, seg_len), np.int32)
         prog = Program().in_(tok).in_(pos)
         for b in leaves:
@@ -340,7 +564,8 @@ class BatchGroup:
         """KV memory accounting, comparable across layouts: contiguous
         groups allocate their full capacity up front (every slot row at
         ``max_seq``, whatever depth is recorded)."""
-        allocated = sum(b.nbytes for b in self.prog._ins[2:])
+        first_leaf = 3 if self.spec_k else 2
+        allocated = sum(b.nbytes for b in self.prog._ins[first_leaf:])
         capacity = self.n_slots * self.max_seq
         return {
             "mode": "contiguous",
@@ -380,10 +605,19 @@ class BatchGroup:
             tokens = np.stack([r.prompt for r in rows]).astype(np.int32)
             prog = Program().in_(tokens)
             prog.out(np.zeros((j, 1), np.int32))
-            for b in self.kernels.leaf_mirrors(j, self.max_seq):
-                prog.out(b)
-            prog.kernel(self.kernels.prefill_kernel(self.max_seq),
-                        f"prefill_{self.bucket}")
+            if self.spec_k:
+                prog.out(np.zeros((j, 1), np.int32))  # ptok0
+                for b in self.kernels.leaf_mirrors(j, self.max_seq):
+                    prog.out(b)
+                for b in self.kernels.draft_leaf_mirrors(j, self.max_seq):
+                    prog.out(b)
+                prog.kernel(self.kernels.spec_prefill_kernel(self.max_seq),
+                            f"spec_prefill_{self.bucket}")
+            else:
+                for b in self.kernels.leaf_mirrors(j, self.max_seq):
+                    prog.out(b)
+                prog.kernel(self.kernels.prefill_kernel(self.max_seq),
+                            f"prefill_{self.bucket}")
             prog.work_items(j, 1)
             self._prefill_prog = prog
             h = self.runtime.submit(prog, self.scheduler)
@@ -404,13 +638,22 @@ class BatchGroup:
             return {"joined": 0, "failed": list(wave), "errors": h.errors(),
                     "seconds": seconds}
         free = self.free_slots()
-        tok_b, pos_b = self.prog._ins[0], self.prog._ins[1]
-        leaf_bufs = self.prog._ins[2:]
-        tok0 = prog._outs[0]
-        wave_leaves = prog._outs[1:]
+        if self.spec_k:
+            tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
+                                    self.prog._ins[2])
+            leaf_bufs = self.prog._ins[3:]
+            tok0, ptok0 = prog._outs[0], prog._outs[1]
+            wave_leaves = prog._outs[2:]
+        else:
+            tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
+            leaf_bufs = self.prog._ins[2:]
+            tok0, ptok0 = prog._outs[0], None
+            wave_leaves = prog._outs[1:]
         for i, req in enumerate(wave):
             slot = free.pop(0)
             tok_b[slot, 0] = tok0[i, 0]
+            if ptok_b is not None:
+                ptok_b[slot, 0] = ptok0[i, 0]
             pos_b[slot, 0] = self.bucket
             for dst, src in zip(leaf_bufs, wave_leaves):
                 dst[slot] = src[i]
@@ -453,18 +696,34 @@ class BatchGroup:
         self.last_run_metrics = h.metrics
         # toks_seg is out 0 and never ping-ponged: stable across segments.
         toks_seg = self.prog._outs[0]
+        cnt = self.prog._outs[1] if self.spec_k else None
         n_active = 0
         finished = []
+        emitted = drafted = accepted = 0
         for slot, req in self.active():
             n_active += 1
             need = req.remaining()
-            take = toks_seg[slot, : min(self.seg_len, need)]
+            if self.spec_k:
+                # Ragged emission: this segment produced cnt tokens for the
+                # slot (seg_len steps, each 1 + its accepted draft depth).
+                c = int(cnt[slot, 0])
+                take = toks_seg[slot, : min(c, need)]
+                emitted += c
+                d, a = self.spec_k * self.seg_len, c - self.seg_len
+                drafted += d
+                accepted += a
+                req.note_spec(d, a)
+            else:
+                take = toks_seg[slot, : min(self.seg_len, need)]
             req.extend(take)
             if req.remaining() <= 0:
                 finished.append(req)
                 self.release_slot(slot)
-        self.tokens_written += n_active * self.seg_len
-        return {"n_active": n_active, "finished": finished, "seconds": seconds}
+        self.tokens_written += emitted if self.spec_k else n_active * self.seg_len
+        res = {"n_active": n_active, "finished": finished, "seconds": seconds}
+        if self.spec_k:
+            res["drafted"], res["accepted"] = drafted, accepted
+        return res
 
     def release_slot(self, slot: int) -> None:
         """Free one KV slot (request retired or failed).  The paged variant

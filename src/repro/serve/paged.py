@@ -364,6 +364,7 @@ class PagedBatchGroup(BatchGroup):
             self.state.table = np.zeros((n_slots, self.nmax), np.int32)
         self.pool = self.state.pool
         leaves = self.state.leaves
+        self._n_pool = len(leaves)
         # Which pool leaves record positions (Spec init "neg_ones"): fresh
         # blocks reset these to −1 so a reused block's stale timeline can
         # never alias valid positions of its new owner.
@@ -372,6 +373,39 @@ class PagedBatchGroup(BatchGroup):
         self.table = self.state.table  # all sink while no slot is boarded
         tok = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots, 1), np.int32)
+        if self.spec_k:
+            # Speculative layout: [tok, ptok, pos, table, *pool, *draft] —
+            # the target cache stays pool-backed; the draft cache rides as
+            # contiguous slot mirrors behind the pool leaves (it is small
+            # and carries no bit-identity obligation, so paging it would
+            # buy nothing).  Draft mirrors are per-group, NOT persisted in
+            # PoolState: groups only dissolve when idle, and an idle
+            # group's draft rows belong to no live request.
+            k = self.spec_k
+            ptok = np.zeros((n_slots, 1), np.int32)
+            dleaves = kernels.draft_leaf_mirrors(n_slots, self.max_seq)
+            all_leaves = leaves + dleaves
+            toks_seg = np.zeros((n_slots, self.seg_len * (k + 1)), np.int32)
+            prog = Program().in_(tok).in_(ptok).in_(pos).in_(self.table)
+            for b in all_leaves:
+                prog.in_(b)
+            prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
+            prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
+            prog.out(np.zeros_like(pos))
+            for b in all_leaves:
+                prog.out(np.zeros_like(b))
+            prog.kernel(kernels.paged_spec_segment_kernel(self.seg_len),
+                        f"spec_pseg{self.seg_len}_k{k}")
+            prog.donate(*range(4, 4 + len(all_leaves)))
+            prog.work_items(n_slots, 1)
+            self.prog = prog
+            self.n_leaves = len(all_leaves)
+            self._swap_pairs = [(0, 2), (1, 3), (2, 4)] + [
+                (4 + i, 5 + i) for i in range(self.n_leaves)
+            ]
+            self.slot_blocks = [None] * n_slots
+            self._plans = []
+            return
         toks_seg = np.zeros((n_slots, self.seg_len), np.int32)
         prog = Program().in_(tok).in_(pos).in_(self.table)
         for b in leaves:
@@ -402,7 +436,8 @@ class PagedBatchGroup(BatchGroup):
         module-level :func:`blocks_needed` so submit-time admission and
         boarding reservation can never desync."""
         return blocks_needed(self.bucket, gen, self.seg_len, self.block_len,
-                             window=self.window, max_seq=self.max_seq)
+                             window=self.window, max_seq=self.max_seq,
+                             spec_step=(self.spec_k + 1) if self.spec_k else 0)
 
     def reserve_estimate(self, req) -> int:
         return self.blocks_for(req.gen)
@@ -427,7 +462,12 @@ class PagedBatchGroup(BatchGroup):
         by_prompt: Dict[bytes, _Plan] = {}
         for r in requests:
             pb = r.prompt.tobytes()
-            if self.prefix_enabled:
+            # Drafting: every joiner must run its own prefill row — the
+            # draft cache has to be produced for the slot, and neither the
+            # whole-prompt cache nor a wave-mate's target row carries it.
+            # Chain-level block sharing inside _assign_blocks is kept:
+            # target KV of identical prefixes is identical bits.
+            if self.prefix_enabled and not self.spec_k:
                 hit = self.pool.lookup_prompt(pb)
                 if hit is not None:
                     blocks, tok0 = hit
@@ -464,9 +504,21 @@ class PagedBatchGroup(BatchGroup):
             return {"joined": 0, "failed": list(wave), "errors": h.errors(),
                     "seconds": seconds}
         free = self.free_slots()
-        tok_b, pos_b = self.prog._ins[0], self.prog._ins[1]
-        tok0 = prog._outs[0] if prog is not None else None
-        wave_leaves = prog._outs[1:] if prog is not None else []
+        if self.spec_k:
+            tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
+                                    self.prog._ins[2])
+            draft_bufs = self.prog._ins[4 + self._n_pool:]
+            tok0 = prog._outs[0] if prog is not None else None
+            ptok0 = prog._outs[1] if prog is not None else None
+            wave_leaves = (prog._outs[2:2 + self._n_pool]
+                           if prog is not None else [])
+            draft_waves = (prog._outs[2 + self._n_pool:]
+                           if prog is not None else [])
+        else:
+            tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
+            draft_bufs, ptok0, draft_waves = [], None, []
+            tok0 = prog._outs[0] if prog is not None else None
+            wave_leaves = prog._outs[1:] if prog is not None else []
         wrote_pool = False
         for plan in plans:
             slot = free.pop(0)
@@ -476,6 +528,10 @@ class PagedBatchGroup(BatchGroup):
             self.table[slot, :] = BlockPool.NULL
             self.table[slot, : len(blocks)] = blocks
             tok_b[slot, 0] = first
+            if ptok_b is not None:
+                ptok_b[slot, 0] = ptok0[plan.row, 0]
+                for dst, src in zip(draft_bufs, draft_waves):
+                    dst[slot] = src[plan.row]
             pos_b[slot, 0] = self.bucket
             req = plan.req
             self.slots[slot] = req
@@ -484,10 +540,14 @@ class PagedBatchGroup(BatchGroup):
         # pool leaves only when some block was actually written (an all-
         # cached wave re-uploads just the small control buffers).
         self.prog.invalidate(tok_b)
+        if ptok_b is not None:
+            self.prog.invalidate(ptok_b)
+            for b in draft_bufs:
+                self.prog.invalidate(b)
         self.prog.invalidate(pos_b)
         self.prog.invalidate(self.table)
         if wrote_pool:
-            for b in self.prog._ins[3:]:
+            for b in self._pool_leaves():
                 self.prog.invalidate(b)
         return {"joined": len(plans), "failed": [], "seconds": seconds}
 
@@ -563,7 +623,7 @@ class PagedBatchGroup(BatchGroup):
             wrote = True
             blocks.append(b)
         first = tok0[plan.row, 0]
-        if self.prefix_enabled and not tail:
+        if self.prefix_enabled and not tail and not self.spec_k:
             # Durable whole-prompt entry (block-aligned prompts only: a
             # partial tail would be appended into by this very request,
             # leaving the entry pointing at mutated bytes).
@@ -574,6 +634,8 @@ class PagedBatchGroup(BatchGroup):
 
     # ------------------------------------------------- pool mirror plumbing
     def _pool_leaves(self) -> list:
+        if self.spec_k:
+            return self.prog._ins[4:4 + self._n_pool]
         return self.prog._ins[3:]
 
     def _store_block(self, block: int, row: list, j: int) -> None:
@@ -615,7 +677,10 @@ class PagedBatchGroup(BatchGroup):
     def harvest_segment(self) -> dict:
         res = super().harvest_segment()
         if "errors" not in res:
-            self.pool.note_tokens(res["n_active"] * self.seg_len)
+            # Under speculation each slot advanced seg_len + its accepted
+            # draft tokens — the net new valid positions in its blocks.
+            self.pool.note_tokens(res["n_active"] * self.seg_len
+                                  + res.get("accepted", 0))
         return res
 
     def detach(self) -> None:
@@ -623,8 +688,8 @@ class PagedBatchGroup(BatchGroup):
         the group dissolves: ping-pong swap epilogues rotate the array
         objects, so the state must track whichever arrays hold the latest
         written-back KV when the next group generation picks them up."""
-        self.state.leaves = list(self.prog._ins[3:])
-        self.state.table = self.prog._ins[2]
+        self.state.leaves = list(self._pool_leaves())
+        self.state.table = self.prog._ins[3 if self.spec_k else 2]
 
     def fail_all(self, errors: Sequence[str]) -> List[object]:
         for slot in range(self.n_slots):
@@ -664,13 +729,23 @@ def validate_paged(cfg, groups, scheduler, spec: PagedSpec) -> None:
 
 
 def blocks_needed(bucket: int, gen: int, seg_len: int, block_len: int,
-                  *, window: int = 0, max_seq: int = 0) -> int:
+                  *, window: int = 0, max_seq: int = 0,
+                  spec_step: int = 0) -> int:
     """Forecast block need of one request (admission-side mirror of
-    ``PagedBatchGroup.blocks_for``, usable before any group exists)."""
+    ``PagedBatchGroup.blocks_for``, usable before any group exists).
+
+    ``spec_step`` is the speculative tokens-per-step *cap* (k+1; 0 or 1 =
+    speculation off): a drafting slot's last segment can start at position
+    ``bucket + gen - 2`` and scatter-write every verify row, so the reserve
+    must cover ``seg_len * spec_step`` positions past that — the worst
+    case, not the expected acceptance (reservation is a guarantee)."""
     if window:
         cs = min(max_seq, window) if max_seq else window
         return -(-cs // block_len)
-    depth = bucket + segments_for(gen, seg_len) * seg_len
+    if spec_step > 1:
+        depth = bucket if gen <= 1 else bucket + gen - 2 + seg_len * spec_step
+    else:
+        depth = bucket + segments_for(gen, seg_len) * seg_len
     return -(-depth // block_len)
 
 

@@ -36,8 +36,15 @@ from repro.core.runtime import Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
 from repro.serve.admission import DeadlineAdmission, PoolAdmission, edf_key
-from repro.serve.batcher import BatchGroup, Buckets, ModelKernels, segments_for
+from repro.serve.batcher import (
+    BatchGroup,
+    Buckets,
+    ModelKernels,
+    segments_for,
+    spec_segments_for,
+)
 from repro.serve.paged import PagedBatchGroup, PagedSpec, validate_paged
+from repro.serve.step import DraftSpec
 
 
 class AdmissionError(RuntimeError):
@@ -65,6 +72,9 @@ class RequestHandle:
         self._tokens: Optional[np.ndarray] = None
         self._error: Optional[BaseException] = None
         self._rejected: Optional[str] = None
+        # Speculative-decoding counters (stay 0 when serving undrafted).
+        self.drafted = 0   # draft tokens proposed for this request
+        self.accepted = 0  # draft tokens the verify step kept
 
     # -- batcher-facing ---------------------------------------------------
     def _finish(self, tokens: np.ndarray) -> None:
@@ -119,6 +129,11 @@ class RequestHandle:
             "prompt_len": self.prompt_len,
             "padded_len": self.padded_len,
             "n_tokens": 0 if self._tokens is None else int(len(self._tokens)),
+            "drafted": self.drafted,
+            "accepted": self.accepted,
+            "rejected_drafts": self.drafted - self.accepted,
+            "acceptance": (self.accepted / self.drafted
+                           if self.drafted else None),
         }
 
 
@@ -148,8 +163,40 @@ class _Request:
     def extend(self, toks) -> None:
         self.tokens.extend(int(t) for t in toks)
 
+    def note_spec(self, drafted: int, accepted: int) -> None:
+        """Accumulate one segment's draft/accept counts onto the handle."""
+        self.handle.drafted += drafted
+        self.handle.accepted += accepted
+
     def remaining(self) -> int:
         return self.gen - len(self.tokens)
+
+
+def validate_draft(cfg, draft: DraftSpec) -> None:
+    """Fail fast on model pairs speculative serving cannot keep
+    bit-identical (the server's contract is exact equality to one-shot
+    generate, so anything that breaks it is a configuration error)."""
+    if draft.cfg.vocab != cfg.vocab:
+        raise ValueError(
+            f"draft vocab {draft.cfg.vocab} != target vocab {cfg.vocab}: "
+            "speculative decoding requires a shared tokenizer/vocab"
+        )
+    for role, c in (("target", cfg), ("draft", draft.cfg)):
+        if c.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"{role} family {c.family!r} cannot serve speculatively: "
+                "recurrent state (ssm/hybrid) has no per-position timeline "
+                "to roll rejected draft tokens back from"
+            )
+        if c.window:
+            raise ValueError(
+                f"{role} uses a rolling window ({c.window}): a multi-row "
+                "verify scatter would overwrite the oldest ring slots that "
+                "its own first row must still attend, breaking bit-identity"
+            )
+    if cfg.seq_shard_cache:
+        raise ValueError("speculative serving is incompatible with "
+                         "seq_shard_cache (mesh decode is single-row)")
 
 
 class InferenceServer:
@@ -172,6 +219,11 @@ class InferenceServer:
     max_wait_ms      : batch-forming window — a lone request waits at most
                        this long for companions before decoding starts.
     admission        : DeadlineAdmission (deadline forecasting + EDF).
+    draft            : DraftSpec for greedy speculative decoding — segments
+                       run draft-k-then-verify steps, emitting 1..k+1
+                       tokens per step while outputs stay bit-identical to
+                       undrafted serving (greedy verify emits the target's
+                       own argmax chain regardless of draft quality).
     """
 
     def __init__(self, cfg, api, params, *,
@@ -185,18 +237,24 @@ class InferenceServer:
                  admission: Optional[DeadlineAdmission] = None,
                  pad_id: int = 0,
                  kernels: Optional[ModelKernels] = None,
-                 paged: Optional[PagedSpec] = None) -> None:
+                 paged: Optional[PagedSpec] = None,
+                 draft: Optional[DraftSpec] = None) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
         self.paged = paged
         if paged is not None:
             validate_paged(cfg, self.groups, self.scheduler, paged)
+        if draft is not None:
+            validate_draft(cfg, draft)
+        self.draft = draft
         self.pool_admission = PoolAdmission()
         # Kernel objects may be shared across servers: DeviceGroups key their
         # jit cache on kernel identity, so a restarted server on warm groups
         # (rolling restart, benchmark sweep) skips recompilation entirely.
-        self.kernels = kernels or ModelKernels(cfg, api, params)
+        self.kernels = kernels or ModelKernels(cfg, api, params, draft=draft)
+        if draft is not None and self.kernels.spec_k != draft.k:
+            raise ValueError("kernels were built without this draft spec")
         self.buckets = Buckets(buckets)
         self.max_batch = int(max_batch)
         self.seg_len = int(seg_len)
@@ -213,7 +271,7 @@ class InferenceServer:
             "submitted": 0, "completed": 0, "rejected": 0, "failed": 0,
             "segments": 0, "occupancy_sum": 0, "tokens_out": 0,
             "prefill_waves": 0, "joins": 0, "midstream_joins": 0,
-            "deferred": 0,
+            "deferred": 0, "tokens_drafted": 0, "tokens_accepted": 0,
         }
         self._mem_totals: dict = {}  # bucket -> folded memory_stats of
         #   dissolved contiguous groups (per-bucket lineage, max-rule)
@@ -264,7 +322,7 @@ class InferenceServer:
                 )
                 return handle
             if not self.admission.admit(now, deadline, bucket,
-                                        segments_for(max_new_tokens, self.seg_len)):
+                                        self._segments_left(max_new_tokens)):
                 self._stats["rejected"] += 1
                 handle._reject(
                     f"deadline {deadline_s * 1e3:.1f}ms below forecast for "
@@ -283,6 +341,8 @@ class InferenceServer:
             mem = self._memory_fold()
         occ = s.pop("occupancy_sum")
         s["mean_occupancy"] = occ / s["segments"] if s["segments"] else 0.0
+        s["acceptance"] = (s["tokens_accepted"] / s["tokens_drafted"]
+                           if s["tokens_drafted"] else None)
         s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
         s["memory"] = mem
         return s
@@ -302,6 +362,14 @@ class InferenceServer:
             "memory": mem,
             "groups": {g.name: g.transfer_stats() for g in self.groups},
             "last_runs": runs,
+            "speculation": {
+                "k": self.draft.k if self.draft else 0,
+                "tokens_drafted": self._stats["tokens_drafted"],
+                "tokens_accepted": self._stats["tokens_accepted"],
+                "acceptance_ema": (
+                    self.admission.model.acceptance(self.draft.k)
+                    if self.draft else None),
+            },
         }
 
     # Within one bucket's group lineage (successive groups re-use the same
@@ -348,7 +416,8 @@ class InferenceServer:
 
         return blocks_needed(bucket, gen, self.seg_len, self.paged.block_len,
                              window=self.kernels.cfg.window or 0,
-                             max_seq=self._max_seq(bucket))
+                             max_seq=self._max_seq(bucket),
+                             spec_step=(self.draft.k + 1) if self.draft else 0)
 
     def _pool_capacity(self, bucket: int) -> int:
         from repro.serve.paged import pool_capacity
@@ -464,7 +533,24 @@ class InferenceServer:
         return timer
 
     def _max_seq(self, bucket: int) -> int:
+        if self.draft is not None:
+            # Speculative slots scatter-write every verify row: the deepest
+            # position a segment can touch is its start (≤ bucket +
+            # max_new_cap - 2) plus seg_len * (k+1) rows — reserve the cap,
+            # not the expected acceptance.
+            return (bucket + self.max_new_cap
+                    + self.seg_len * (self.draft.k + 1))
         return bucket + segments_for(self.max_new_cap, self.seg_len) * self.seg_len
+
+    def _segments_left(self, gen: int) -> int:
+        """Decode segments a request with ``gen`` tokens still owed needs —
+        the admission forecast's work unit.  Under speculation this uses the
+        observed expected tokens-per-step (1 + acceptance·k), so deadline
+        forecasts tighten as acceptance evidence accumulates."""
+        if self.draft is None:
+            return segments_for(gen, self.seg_len)
+        tps = self.admission.model.tokens_per_step(self.draft.k)
+        return spec_segments_for(gen, self.seg_len, tps)
 
     def _advance_group(self, grp: BatchGroup, now: float) -> None:
         if grp.seg_handle is not None and grp.seg_handle.done():
@@ -475,6 +561,12 @@ class InferenceServer:
             self.admission.model.observe("segment", grp.bucket, res["seconds"])
             self._stats["segments"] += 1
             self._stats["occupancy_sum"] += res["n_active"]
+            drafted = res.get("drafted", 0)
+            if drafted:
+                self._stats["tokens_drafted"] += drafted
+                self._stats["tokens_accepted"] += res["accepted"]
+                self.admission.model.observe_acceptance(
+                    self.draft.k, res["accepted"] / drafted)
             for req in res["finished"]:
                 self._retire(req)
         # Merging rewrites the segment Program's host mirrors, so it is only
@@ -525,7 +617,7 @@ class InferenceServer:
             # memory deferral would otherwise park it at the head of the EDF
             # queue and starve feasible requests queued behind it.
             if not self.admission.admit(now, q[0].deadline, grp.bucket,
-                                        segments_for(q[0].gen, self.seg_len)):
+                                        self._segments_left(q[0].gen)):
                 req = q.pop(0)
                 self._stats["rejected"] += 1
                 req.handle._reject("deadline unreachable at boarding time")

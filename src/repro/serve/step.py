@@ -14,7 +14,9 @@ cast, and caching tracers across traces would leak them.
 """
 from __future__ import annotations
 
+import dataclasses
 import weakref
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -183,3 +185,79 @@ def make_decode_chain(cfg, api):
         return jnp.swapaxes(toks[..., 0], 0, 1), tok, cache
 
     return decode_chain
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """Speculative-decoding draft model: a small config sharing the target's
+    tokenizer/vocab, its own params, and the draft depth ``k`` (candidate
+    tokens proposed per verify step).  ``k = 1`` is the shallowest useful
+    draft: one candidate, 1–2 tokens emitted per step."""
+
+    cfg: Any
+    params: Any
+    k: int = 2
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"draft k must be >= 1, got {self.k}")
+
+
+def make_draft_verify_step(cfg, api, dcfg, dapi, k: int):
+    """One greedy speculative step: draft ``k`` candidates, verify all of
+    them (plus the carried token) in a single multi-row decode, accept the
+    longest matching prefix.
+
+    ``step(params, dparams, cache, dcache, tok, ptok, pos)`` returns
+    ``(y, cnt, tok', ptok', pos', cache, dcache)`` where ``y`` is (B, k+1)
+    verified greedy tokens of which the first ``cnt`` (1..k+1 per slot) are
+    emitted this step; ``tok``/``ptok`` are (B, 1) — the pending token at
+    position ``pos`` and its predecessor at ``pos - 1``; ``pos`` is (B,).
+
+    Greedy acceptance keeps bit-identity exact: every emitted token is the
+    target model's own argmax given previously emitted tokens.  Row ``j`` of
+    the verify decode attends the cache exactly as sequential decode at
+    ``pos + j`` would (its keys through ``pos + j`` are written before
+    attention; deeper rows' keys sit beyond its mask), so ``y[:, j]`` is
+    bitwise the token sequential decode would produce — whether the draft
+    guessed right only decides how many rows we may *keep* (``cnt``), never
+    their bits.  Rejected rows leave stale keys above ``pos'``; the next
+    step's scatter overwrites them before any row attends those positions.
+
+    The draft cache rides the same timeline: the first draft step is a
+    2-row decode of ``[ptok, tok]`` at ``pos - 1``, which both proposes the
+    first candidate and repairs the draft cache hole at ``pos - 1`` left
+    when the previous step accepted every candidate (draft never saw its
+    own last proposal's successor).  Draft-cache staleness can only lower
+    the acceptance rate, never corrupt emitted bits."""
+
+    def step(params, dparams, cache, dcache, tok, ptok, pos):
+        params = cast_params_cached(params, cfg.compute_dtype)
+        dparams = cast_params_cached(dparams, dcfg.compute_dtype)
+        b = tok.shape[0]
+        bidx = jnp.arange(b)
+
+        # Draft k candidates autoregressively (small model, k tiny).
+        x0 = jnp.concatenate([ptok, tok], axis=1)  # (B, 2) at pos-1, pos
+        dlog, dcache = dapi.decode(dparams, x0, pos - 1, dcfg, dcache)
+        cand = jnp.argmax(dlog[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        ds = [cand]
+        for j in range(1, k):
+            dlog, dcache = dapi.decode(dparams, ds[-1], pos + j, dcfg, dcache)
+            ds.append(jnp.argmax(dlog[:, -1], axis=-1).astype(jnp.int32)[:, None])
+        drafts = jnp.concatenate(ds, axis=1)  # (B, k)
+
+        # One multi-row verify over [tok, d1..dk] at pos..pos+k.
+        xs = jnp.concatenate([tok, drafts], axis=1)  # (B, k+1)
+        logits, cache = api.decode(params, xs, pos, cfg, cache)
+        y = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k+1)
+
+        # Longest prefix of drafts matching the target's own greedy chain.
+        match = drafts == y[:, :k]
+        acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        cnt = acc + 1  # emitted tokens this step: y[:, :cnt]
+        tok2 = y[bidx, acc][:, None]  # next pending token, at pos + cnt
+        ptok2 = xs[bidx, acc][:, None]  # its predecessor, at pos + cnt - 1
+        return y, cnt, tok2, ptok2, pos + cnt, cache, dcache
+
+    return step

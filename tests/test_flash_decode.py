@@ -81,6 +81,74 @@ def test_parity_and_row_bit_identity(kv, cache_dtype, window, s, block_k, pos):
                                    atol=1e-6)
 
 
+@pytest.mark.parametrize("kv", [4, 2, 1])  # GQA ratios 1, 2, 4 (h = 4)
+@pytest.mark.parametrize("sq", [1, 2, 4])  # rows per slot (verify depth k+1)
+@pytest.mark.parametrize("cache_dtype", [jnp.float32, jnp.bfloat16])
+def test_multirow_parity_and_row_bit_identity(kv, sq, cache_dtype):
+    """Multi-row (speculative-verify) mode of the same kernel: each slot's
+    ``sq`` query rows sit at consecutive positions and mask at their own
+    depth.  Cache-as-stored holds keys through ``pos + sq - 1`` (verify
+    writes keys before attending, so every row's own key is recorded);
+    positions cover empty, start, tile-boundary straddles (a row group
+    crossing block_k), and full depth."""
+    s, block_k, h, hd = 48, 16, 4, 16
+    pos = (-1, 0, 14, 15, 16, 48 - sq)
+    b = len(pos)
+    # deepest recorded key per slot = pos + sq - 1 (clamped into the cache)
+    written = [(-1 if p < 0 else min(p + sq - 1, s - 1)) for p in pos]
+    q = jax.random.normal(jax.random.PRNGKey(11), (b, sq, h, hd), jnp.float32)
+    k, v, kpos = ragged_cache(29, b, s, kv, hd, written, 0, cache_dtype)
+    posv = jnp.asarray(pos, jnp.int32)
+    want = ref.flash_decode_ref(q, k, v, kpos, posv)
+    got = flash_decode(q, k, v, kpos, posv, block_k=block_k, interpret=True)
+    got_xla = flash_decode_xla(q, k, v, kpos, posv, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               atol=2e-5)
+    for i, p in enumerate(pos):
+        if p < 0:
+            # row 0 (pos −1) sees no valid keys: exact zeros
+            assert not np.any(np.asarray(got[i, 0]))
+        # batch invariance per slot — all sq rows at once (the serving
+        # contract the draft/verify step rests on)
+        one = flash_decode(q[i:i + 1], k[i:i + 1], v[i:i + 1], kpos[i:i + 1],
+                           posv[i:i + 1], block_k=block_k, interpret=True)
+        np.testing.assert_array_equal(np.asarray(one[0]), np.asarray(got[i]))
+
+
+def test_multirow_rows_match_sequential_single_row():
+    """Row ``j`` of one multi-row call computes the single-row call's value
+    at ``pos + j`` on the same cache: identical mask, identical tile
+    reduction order.  The comparison is ~1-ulp, not bitwise — the rows share
+    one dot whose lowering depends on the row count (same caveat as the XLA
+    loop above).  What serving's verify relies on is the *token-level*
+    equivalence downstream of the argmax, which the spec server suite
+    asserts bitwise against one-shot generate."""
+    s, block_k, h, kv, hd, sq = 32, 8, 4, 2, 16, 3
+    pos = (0, 5, 29)
+    b = len(pos)
+    written = [min(p + sq - 1, s - 1) for p in pos]
+    q = jax.random.normal(jax.random.PRNGKey(13), (b, sq, h, hd), jnp.float32)
+    k, v, kpos = ragged_cache(31, b, s, kv, hd, written, 0, jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+    got = flash_decode(q, k, v, kpos, posv, block_k=block_k, interpret=True)
+    for j in range(sq):
+        one = flash_decode(q[:, j:j + 1], k, v, kpos, posv + j,
+                           block_k=block_k, interpret=True)
+        np.testing.assert_allclose(np.asarray(one[:, 0]),
+                                   np.asarray(got[:, j]), atol=1e-6)
+
+
+def test_needed_tiles_multirow_union():
+    """sq > 1 widens the tile bound to the union of the per-row masks: the
+    deepest row's keys extend the upper bound."""
+    kpos = jnp.asarray([[0, 1, 2, 3, 4, 5, 6, 7]], jnp.int32)
+    pos = jnp.asarray([3], jnp.int32)
+    assert needed_tiles(kpos, pos, block_k=4).tolist() == [1]
+    # rows at pos 3..5: key 4 and 5 live in tile 1
+    assert needed_tiles(kpos, pos, block_k=4, sq=3).tolist() == [2]
+
+
 def as_pool(k, v, kpos, bl, seed=0):
     """Scatter a contiguous ragged cache into a block pool with a random
     physical permutation: pool k/v/kpos of (N, bl, ...) plus (B, nmax)
@@ -141,6 +209,27 @@ def test_paged_kernel_parity(kv, window, s, bl, pos):
                                  tables[i:i + 1], posv[i:i + 1],
                                  window=window, interpret=True)
         np.testing.assert_array_equal(np.asarray(one[0]), np.asarray(got[i]))
+
+
+@pytest.mark.parametrize("sq", [2, 4])
+def test_paged_multirow_bit_identical_to_contiguous(sq):
+    """The paged kernel's multi-row mode inherits the contiguous kernel's
+    bits through block-table indirection — the paged serving path's verify
+    step scores candidates identically to the contiguous one."""
+    s, bl, h, kv, hd = 32, 8, 4, 2, 16
+    pos = (0, 7, 32 - sq)
+    b = len(pos)
+    written = [min(p + sq - 1, s - 1) for p in pos]
+    q = jax.random.normal(jax.random.PRNGKey(17), (b, sq, h, hd), jnp.float32)
+    k, v, kpos = ragged_cache(37, b, s, kv, hd, written, 0, jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+    kpool, vpool, kp, tables = as_pool(k, v, kpos, bl)
+    want = flash_decode(q, k, v, kpos, posv, block_k=bl, interpret=True)
+    got = flash_decode_paged(q, kpool, vpool, kp, tables, posv, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.flash_decode_ref(q, k, v, kpos, posv)), atol=2e-5)
 
 
 def test_paged_gather_dense_matches_contiguous_dense():
@@ -250,11 +339,9 @@ def test_hybrid_arch_vector_pos_decode():
     decode contract — the hybrid (rglru + windowed-attention) stack included
     (its recurrence cache ignores pos; its attention layers must not).
 
-    The rec blocks' batched lowering is not bit-identical to batch-1 on
-    this backend (pre-existing, ~1e-7, depth-independent), so the exact
-    assertion here is plumbing equivalence — a uniform position *vector*
-    computes the very bits of the scalar-pos batched decode — plus
-    numerical row agreement with batch-1 decode for ragged depths."""
+    With the rec-block gates unrolled per block (no batched-dim dot whose
+    lowering depends on batch size), batched rows are bit-identical to the
+    same row decoded alone at b=1, for ragged depths too."""
     from repro.serve import cache_batch_axes
 
     cfg = reduced(get_config("recurrentgemma-2b"))
@@ -275,13 +362,13 @@ def test_hybrid_arch_vector_pos_decode():
                        batched)
     ls, _ = api.decode(params, tok, jnp.int32(4), cfg, batched)
     np.testing.assert_array_equal(np.asarray(lv), np.asarray(ls))
-    # ragged depths: each row numerically matches its own b=1 decode
+    # ragged depths: each row exactly matches its own b=1 decode
     logits, _ = api.decode(params, tok, jnp.asarray(depths, jnp.int32), cfg,
                            batched)
     for i, d in enumerate(depths):
         want, _ = api.decode(params, toks[i], jnp.int32(d), cfg, caches[i])
-        np.testing.assert_allclose(np.asarray(logits[i]), np.asarray(want[0]),
-                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(logits[i]),
+                                      np.asarray(want[0]))
 
 
 def test_cache_dtype_roundtrip(model):

@@ -1,0 +1,264 @@
+"""Speculative decoding: greedy draft/verify bit-identity to one-shot
+generate — unit step, contiguous and paged servers under mid-stream
+join/exit and prefix-cache hits — plus the admission/accounting math
+(acceptance EMA, segment forecasts, block reservation) and the draft
+configuration gates."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import get_model
+from repro.models import params as P
+from repro.serve import (
+    DraftSpec,
+    InferenceServer,
+    PagedSpec,
+    ServiceModel,
+    blocks_needed,
+    make_draft_verify_step,
+    make_generate,
+    make_prefill_step,
+    segments_for,
+    spec_segments_for,
+    validate_draft,
+    zeros_cache,
+)
+
+PLEN, GEN = 8, 9
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("internlm2-20b"))  # GQA target
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def weak_draft(model):
+    """Same arch, different seed: a draft that genuinely disagrees with the
+    target (low acceptance), exercising the rejection/rollback path."""
+    cfg, api, _ = model
+    dparams = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(7),
+                            jnp.float32)
+    return lambda k: DraftSpec(cfg, dparams, k=k)
+
+
+@pytest.fixture(scope="module")
+def reference(model):
+    cfg, api, params = model
+    gen = make_generate(cfg, api)
+
+    def ref(prompt, n):
+        toks = gen(params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, n)
+        return np.asarray(toks)[0]
+
+    return ref
+
+
+def prompts_for(cfg, seed, n, plen=PLEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, plen).astype(np.int32) for _ in range(n)]
+
+
+# ------------------------------------------------------------ unit step
+@pytest.mark.parametrize("draft_seed,k", [(0, 2), (7, 1), (7, 3)])
+def test_draft_verify_step_emits_one_shot_chain(model, reference,
+                                                draft_seed, k):
+    """Driving make_draft_verify_step to GEN tokens reproduces one-shot
+    generate bit-for-bit — with the target drafting for itself (full
+    acceptance) AND with a disagreeing draft (constant rejections): draft
+    quality moves only cnt, never the emitted bits."""
+    cfg, api, params = model
+    dparams = params if draft_seed == 0 else P.materialize(
+        api.param_spec(cfg, 1), jax.random.PRNGKey(draft_seed), jnp.float32)
+    b = 2
+    prompts = np.stack(prompts_for(cfg, 21, b))
+    want = np.stack([reference(p, GEN) for p in prompts])
+
+    step = make_draft_verify_step(cfg, api, cfg, api, k)
+    prefill = make_prefill_step(cfg, api)
+    max_seq = PLEN + GEN + 4 * (k + 1)
+    cache = zeros_cache(cfg, api, b, max_seq)
+    dcache = zeros_cache(cfg, api, b, max_seq)
+    tok, cache = prefill(params, {"tokens": jnp.asarray(prompts)}, cache)
+    _, dcache = prefill(dparams, {"tokens": jnp.asarray(prompts)}, dcache)
+    ptok = jnp.asarray(prompts[:, -1:], jnp.int32)
+    pos = jnp.full((b,), PLEN, jnp.int32)
+    bufs = [[int(tok[i, 0])] for i in range(b)]
+    while min(len(x) for x in bufs) < GEN:
+        y, cnt, tok, ptok, pos, cache, dcache = step(
+            params, dparams, cache, dcache, tok, ptok, pos)
+        y, cnt = np.asarray(y), np.asarray(cnt)
+        assert all(1 <= c <= k + 1 for c in cnt), cnt
+        for i in range(b):
+            bufs[i].extend(int(t) for t in y[i, :cnt[i]])
+    got = np.stack([np.asarray(x[:GEN]) for x in bufs])
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------- server, contiguous
+def test_server_contiguous_spec_midstream_bit_identity(model, weak_draft,
+                                                       reference):
+    """Weak draft, staggered arrivals, mixed lengths (slots join and exit a
+    running decode mid-stream): every stream equals one-shot generate, and
+    the speculation counters account every drafted token."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 31, 6)
+    gens = [GEN, 4, GEN, 6, GEN, 5]
+    with InferenceServer(cfg, api, params, buckets=(PLEN,), max_batch=2,
+                         seg_len=2, max_new_cap=16, max_wait_ms=5.0,
+                         draft=weak_draft(2)) as srv:
+        handles = []
+        for p, n in zip(prompts, gens):
+            time.sleep(2e-3)
+            handles.append(srv.submit(p, n))
+        results = [h.result(timeout=300) for h in handles]
+        s = srv.stats()
+        mets = [h.metrics for h in handles]
+    for p, n, got in zip(prompts, gens, results):
+        np.testing.assert_array_equal(got, reference(p, n))
+    assert s["completed"] == 6
+    assert s["tokens_drafted"] > 0
+    assert 0.0 <= s["acceptance"] <= 1.0
+    for m in mets:
+        assert m["drafted"] == m["accepted"] + m["rejected_drafts"]
+        assert 0.0 <= m["acceptance"] <= 1.0
+    spec = srv.metrics["speculation"]
+    assert spec["k"] == 2
+    assert spec["tokens_drafted"] == sum(m["drafted"] for m in mets)
+
+
+def test_server_self_draft_full_acceptance(model, reference):
+    """Target drafting for itself accepts every candidate: acceptance == 1
+    and every step emits k+1 tokens (the upper bound of the accounting)."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 41, 3)
+    with InferenceServer(cfg, api, params, buckets=(PLEN,), max_batch=3,
+                         seg_len=2, max_new_cap=16,
+                         draft=DraftSpec(cfg, params, k=2)) as srv:
+        handles = [srv.submit(p, GEN) for p in prompts]
+        results = [h.result(timeout=300) for h in handles]
+        s = srv.stats()
+    for p, got in zip(prompts, results):
+        np.testing.assert_array_equal(got, reference(p, GEN))
+    assert s["acceptance"] == 1.0
+    assert s["tokens_accepted"] == s["tokens_drafted"] > 0
+
+
+# -------------------------------------------------------------- server, paged
+def test_server_paged_spec_bit_identity_with_prefix_hits(model, weak_draft,
+                                                         reference):
+    """Paged pool + drafting: staggered joins/exits, duplicate prompts (the
+    retained chain-level block sharing must register prefix hits), weak
+    draft k=2 — streams stay bit-identical and pool blocks all return."""
+    cfg, api, params = model
+    base = prompts_for(cfg, 51, 3)
+    prompts = [base[0], base[1], base[0], base[2], base[0]]  # repeats: hits
+    gens = [GEN, 5, GEN, 6, 4]
+    with InferenceServer(cfg, api, params, buckets=(PLEN,), max_batch=2,
+                         seg_len=2, max_new_cap=16, max_wait_ms=5.0,
+                         paged=PagedSpec(block_len=4),
+                         draft=weak_draft(2)) as srv:
+        handles = []
+        for p, n in zip(prompts, gens):
+            time.sleep(2e-3)
+            handles.append(srv.submit(p, n))
+        results = [h.result(timeout=300) for h in handles]
+        s = srv.stats()
+    for p, n, got in zip(prompts, gens, results):
+        np.testing.assert_array_equal(got, reference(p, n))
+    assert s["tokens_drafted"] > 0
+    mem = s["memory"]
+    assert mem["mode"] == "paged"
+    assert mem["prefix_hits"] > 0, mem
+    # all remaining in-use blocks are opportunistic cache retention
+    # (reclaimable on demand): no live request holds anything
+    assert mem["blocks_in_use"] == mem["blocks_cached"], mem
+
+
+@pytest.mark.parametrize("paged", [None, PagedSpec(block_len=4)])
+def test_server_spec_pallas_kernel_bit_identity(model, weak_draft, paged):
+    """The multi-row verify through the Pallas kernel path (interpret):
+    drafted streams still match one-shot generate on the same kernel cfg."""
+    cfg, api, params = model
+    kcfg = dataclasses.replace(cfg, kernel_impl="pallas_interpret")
+    if paged:
+        kcfg = dataclasses.replace(kcfg, decode_block=paged.block_len)
+    prompts = prompts_for(cfg, 61, 2)
+    gen = make_generate(kcfg, api)
+    with InferenceServer(kcfg, api, params, buckets=(PLEN,), max_batch=2,
+                         seg_len=2, max_new_cap=8, paged=paged,
+                         draft=weak_draft(2)) as srv:
+        handles = [srv.submit(p, 5) for p in prompts]
+        results = [h.result(timeout=300) for h in handles]
+    for p, got in zip(prompts, results):
+        want = np.asarray(gen(params, {"tokens": jnp.asarray(p[None])}, 5))[0]
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- accounting math
+def test_spec_segments_for_degrades_and_forecasts():
+    for gen in (1, 2, 5, 9):
+        assert spec_segments_for(gen, 2, 1.0) == segments_for(gen, 2)
+    # 9 tokens after prefill's first: 8 left; 2 steps/segment * 2.6 tok/step
+    assert spec_segments_for(9, 2, 2.6) == 2
+    assert spec_segments_for(9, 2, 3.0) == 2
+    assert spec_segments_for(1, 2, 3.0) == 0
+    # tokens_per_step below 1 is clamped (a step always emits >= 1)
+    assert spec_segments_for(9, 2, 0.1) == segments_for(9, 2)
+
+
+def test_service_model_acceptance_ema():
+    sm = ServiceModel(alpha=0.5)
+    assert sm.acceptance(2) is None
+    assert sm.tokens_per_step(2) == 1.0  # cold: conservative plain rate
+    assert sm.tokens_per_step(0) == 1.0
+    sm.observe_acceptance(2, 1.0)
+    assert sm.tokens_per_step(2) == 3.0
+    sm.observe_acceptance(2, 0.0)
+    assert sm.acceptance(2) == 0.5
+    sm.observe_acceptance(2, 5.0)       # clamped to 1.0
+    assert sm.acceptance(2) == 0.75
+    sm.observe_acceptance(4, float("nan"))  # ignored
+    assert sm.acceptance(4) is None
+    assert sm.tokens_per_step(4) == 1.0
+
+
+def test_blocks_needed_spec_reserve():
+    # speculation off (0 or 1) keeps the plain forecast
+    assert blocks_needed(8, 6, 2, 4) == blocks_needed(8, 6, 2, 4, spec_step=1)
+    # drafting reserve covers the worst case: last segment may start at
+    # bucket + gen - 2 and scatter seg_len * (k+1) verify rows past it
+    want = -(-(8 + 6 - 2 + 2 * 3) // 4)
+    assert blocks_needed(8, 6, 2, 4, spec_step=3) == want
+    assert blocks_needed(8, 6, 2, 4, spec_step=3) >= blocks_needed(8, 6, 2, 4)
+    # gen <= 1 never decodes: no reserve beyond the prompt
+    assert blocks_needed(8, 1, 2, 4, spec_step=3) == -(-8 // 4)
+
+
+def test_validate_draft_gates(model):
+    cfg, _, params = model
+    ok = DraftSpec(cfg, params, k=2)
+    validate_draft(cfg, ok)  # sane pair passes
+    with pytest.raises(ValueError, match="vocab"):
+        validate_draft(
+            cfg, DraftSpec(dataclasses.replace(cfg, vocab=cfg.vocab + 1),
+                           params, k=2))
+    hybrid = reduced(get_config("recurrentgemma-2b"))
+    with pytest.raises(ValueError, match="per-position timeline"):
+        validate_draft(hybrid, DraftSpec(hybrid, params, k=2))
+    with pytest.raises(ValueError, match="rolling window"):
+        validate_draft(dataclasses.replace(cfg, window=8), ok)
+    with pytest.raises(ValueError, match="seq_shard_cache"):
+        validate_draft(dataclasses.replace(cfg, seq_shard_cache=True), ok)
+    with pytest.raises(ValueError, match="k must be"):
+        DraftSpec(cfg, params, k=0)
