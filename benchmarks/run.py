@@ -29,9 +29,9 @@ minutes on the CI container; ``--full`` reproduces the paper-scale settings.
 
 ``--baseline BENCH_x.json ...`` turns the run into a regression gate: the
 named committed reports are snapshotted *before* the benchmarks overwrite
-them, and every ``tokens_per_s`` metric in the fresh output is compared
-against its committed value — any cell more than 20% slower fails the run
-(exit 1).
+them, and the fresh output is compared against the committed values —
+any ``tokens_per_s`` cell more than 20% slower, or any serving
+``ttft_p99_s`` cell more than 30% higher, fails the run (exit 1).
 """
 from __future__ import annotations
 
@@ -226,12 +226,26 @@ def serve_bench(rows: list[str], full: bool,
                     f"{r['tokens_per_s']:.1f}")
         if r["deadline_s"]:
             rows.append(f"serve_rejection_{tag},0,{r['rejection_rate']:.3f}")
+    for r in out.get("mixed_sweep", []):
+        tag = f"{r['rate_rps']:g}rps_mixed"
+        tag += f"_c{r['chunk_len']}" if r.get("chunk_len") else ""
+        rows.append(f"serve_ttft_p99_{tag},"
+                    f"{r['ttft_p99_interactive_s'] * 1e6:.0f},"
+                    f"{r['tokens_per_s']:.1f}")
     pv = out.get("paged_vs_contiguous")
     if pv:
         # derived = paged/contiguous peak KV allocation at equal load (< 1:
         # memory scales with recorded depth, not slot capacity).
         rows.append(f"serve_kv_alloc_ratio,{pv['paged_kv_bytes_allocated']},"
                     f"{pv['allocated_ratio']:.3f}")
+    cw = out.get("chunked_vs_whole")
+    if cw:
+        # derived = whole/chunked p99 TTFT at the top mixed-prompt rate
+        # (> 1: dissolving prefill into decode segments cut the first-token
+        # tail; tokens/s must hold — the baseline gate checks both).
+        rows.append(
+            f"serve_chunked_ttft_ratio,{cw['chunked_ttft_p99_s'] * 1e6:.0f},"
+            f"{cw['ttft_p99_ratio']:.2f}")
     with open(json_path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
 
@@ -283,21 +297,24 @@ def spec_bench(rows: list[str], full: bool,
 
 # Keys that identify a sweep cell (used to build stable baseline labels for
 # list entries, so reordering a sweep cannot mispair cells).
-_ID_KEYS = ("rate_rps", "deadline_s", "kv_mode", "depth", "occupancy",
-            "k", "alpha")
+_ID_KEYS = ("rate_rps", "deadline_s", "chunk_len", "kv_mode", "depth",
+            "occupancy", "k", "alpha")
 
 
-def _walk_tokens_per_s(obj, prefix: str = "") -> dict[str, float]:
-    """Flatten every numeric ``*tokens_per_s*`` metric in a BENCH report to
-    a stable ``path.key`` -> value map."""
+def _walk_metric(obj, match: str, prefix: str = "") -> dict[str, float]:
+    """Flatten every numeric metric whose key contains ``match`` in a BENCH
+    report to a stable ``path.key`` -> value map."""
     out: dict[str, float] = {}
     if isinstance(obj, dict):
         for key in sorted(obj):
             v = obj[key]
-            if isinstance(v, (int, float)) and "tokens_per_s" in key:
+            # "ratio" keys are comparisons between cells, not metrics of a
+            # cell — both of a ratio's legs are gated directly instead.
+            if isinstance(v, (int, float)) and match in key \
+                    and "ratio" not in key:
                 out[f"{prefix}{key}"] = float(v)
             elif isinstance(v, (dict, list)):
-                out.update(_walk_tokens_per_s(v, f"{prefix}{key}."))
+                out.update(_walk_metric(v, match, f"{prefix}{key}."))
     elif isinstance(obj, list):
         for i, v in enumerate(obj):
             tag = str(i)
@@ -305,35 +322,42 @@ def _walk_tokens_per_s(obj, prefix: str = "") -> dict[str, float]:
                 ids = [f"{kk}={v[kk]}" for kk in _ID_KEYS if kk in v]
                 if ids:
                     tag = ",".join(ids)
-            out.update(_walk_tokens_per_s(v, f"{prefix}[{tag}]."))
+            out.update(_walk_metric(v, match, f"{prefix}[{tag}]."))
     return out
 
 
-def load_baselines(paths: list[str]) -> dict[str, dict[str, float]]:
-    """Snapshot committed throughput metrics before the run overwrites the
-    report files in place."""
+def load_baselines(paths: list[str]) -> dict[str, dict[str, dict[str, float]]]:
+    """Snapshot committed gated metrics before the run overwrites the
+    report files in place: throughput (``tokens_per_s``, higher is better)
+    and serving first-token tail latency (``ttft_p99_s``, lower is
+    better)."""
     snaps = {}
     for p in paths:
         with open(p) as f:
-            snaps[p] = _walk_tokens_per_s(json.load(f))
+            doc = json.load(f)
+        snaps[p] = {"tokens_per_s": _walk_metric(doc, "tokens_per_s"),
+                    "ttft_p99_s": _walk_metric(doc, "ttft_p99")}
     return snaps
 
 
-def check_baselines(snaps: dict[str, dict[str, float]],
-                    tol: float = 0.20) -> list[str]:
+def check_baselines(snaps: dict[str, dict[str, dict[str, float]]],
+                    tol: float = 0.20, ttft_tol: float = 0.30) -> list[str]:
     """Compare freshly written reports against the committed snapshots:
-    returns one failure line per tokens/s metric > ``tol`` below baseline.
-    Cells present only on one side are skipped (sweeps may grow/shrink)."""
+    one failure line per tokens/s metric > ``tol`` below baseline and per
+    p99-TTFT metric > ``ttft_tol`` above it (throughput regresses *down*,
+    tail latency regresses *up*).  Cells present only on one side are
+    skipped (sweeps may grow/shrink)."""
     fails = []
-    for p, base in snaps.items():
+    for p, snap in snaps.items():
         try:
             with open(p) as f:
-                fresh = _walk_tokens_per_s(json.load(f))
+                doc = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
             fails.append(f"{p}: not regenerated by this run")
             continue
-        for key, want in sorted(base.items()):
-            got = fresh.get(key)
+        fresh_tok = _walk_metric(doc, "tokens_per_s")
+        for key, want in sorted(snap["tokens_per_s"].items()):
+            got = fresh_tok.get(key)
             if got is None or want <= 0:
                 continue
             if got < (1.0 - tol) * want:
@@ -341,6 +365,17 @@ def check_baselines(snaps: dict[str, dict[str, float]],
                     f"{p}:{key}: {got:.1f} tokens/s is "
                     f"{100 * (1 - got / want):.0f}% below baseline "
                     f"{want:.1f} (tolerance {tol:.0%})"
+                )
+        fresh_ttft = _walk_metric(doc, "ttft_p99")
+        for key, want in sorted(snap["ttft_p99_s"].items()):
+            got = fresh_ttft.get(key)
+            if got is None or want <= 0:
+                continue
+            if got > (1.0 + ttft_tol) * want:
+                fails.append(
+                    f"{p}:{key}: {got * 1e3:.0f}ms p99 TTFT is "
+                    f"{100 * (got / want - 1):.0f}% above baseline "
+                    f"{want * 1e3:.0f}ms (tolerance {ttft_tol:.0%})"
                 )
     return fails
 
@@ -389,7 +424,8 @@ def main() -> None:
     ap.add_argument("--baseline", nargs="*", default=[],
                     help="committed BENCH_*.json files to gate against: "
                          "fail (exit 1) if any fresh tokens_per_s metric "
-                         "regresses >20%% vs its committed value")
+                         "regresses >20%%, or any serving ttft_p99_s "
+                         "metric rises >30%%, vs its committed value")
     args = ap.parse_args()
 
     unknown = sorted(set(args.tables) - set(KNOWN_TABLES))
@@ -434,8 +470,9 @@ def main() -> None:
             print("# BASELINE REGRESSION:")
             print("\n".join(f"#   {f}" for f in fails))
             raise SystemExit(1)
-        n = sum(len(v) for v in baselines.values())
-        print(f"# baseline check passed ({n} tokens/s metrics within 20%)")
+        n = sum(len(m) for v in baselines.values() for m in v.values())
+        print(f"# baseline check passed ({n} metrics: tokens/s within "
+              "20%, p99 TTFT within 30%)")
 
 
 if __name__ == "__main__":

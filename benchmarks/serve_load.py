@@ -27,13 +27,26 @@ def _percentile(sorted_vals, q):
 def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
               gen: int, seg_len: int, max_batch: int, seed: int,
               admission, deadline_s: Optional[float], group, kernels,
-              paged=None) -> dict:
+              paged=None, plens=None, chunk_len: int = 0) -> dict:
     from repro.core import Static
     from repro.serve import InferenceServer
 
     rng = np.random.default_rng(seed)
-    prompts = [rng.integers(0, cfg.vocab, plen).astype(np.int32)
-               for _ in range(n_requests)]
+    # ``plens`` mixes prompt lengths in one trace: a burst of long-context
+    # requests with short interactive traffic arriving behind it — the
+    # deterministic worst case the prefill/decode barrier creates (every
+    # short request's *first* token must wait for a monolithic long-bucket
+    # prefill Program to leave the device; chunked prefill caps that wait
+    # at one decode segment).  Same seed ⇒ identical trace across passes
+    # that differ only in chunk_len.
+    if plens:
+        half = n_requests // 2
+        lens = np.array([max(plens)] * half
+                        + [min(plens)] * (n_requests - half), np.int64)
+    else:
+        lens = np.full(n_requests, plen, np.int64)
+    prompts = [rng.integers(0, cfg.vocab, int(n)).astype(np.int32)
+               for n in lens]
     gaps = rng.exponential(1.0 / rate, n_requests)
     transfers0 = group.n_transfers
     t0 = time.perf_counter()
@@ -42,10 +55,12 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
     # paged pool reserves for each request's actual gen (recorded depth) —
     # the allocated-bytes gap the sweep measures.
     with InferenceServer(cfg, api, params, groups=[group], scheduler=Static(),
-                         buckets=(plen,), max_batch=max_batch, seg_len=seg_len,
+                         buckets=tuple(sorted(set(plens))) if plens
+                         else (plen,),
+                         max_batch=max_batch, seg_len=seg_len,
                          max_new_cap=2 * gen, max_wait_ms=2.0,
                          admission=admission, kernels=kernels,
-                         paged=paged) as srv:
+                         paged=paged, chunk_len=chunk_len) as srv:
         handles = []
         for p, gap in zip(prompts, gaps):
             time.sleep(gap)
@@ -56,13 +71,28 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
     wall = time.perf_counter() - t0
     lat = sorted(h.metrics["latency"] for h in handles
                  if not h.rejected and h.metrics["latency"] is not None)
+    ttft = sorted(h.metrics["ttft"] for h in handles
+                  if not h.rejected and h.metrics["ttft"] is not None)
+    # Interactive-class TTFT: the short requests only.  In a mixed trace
+    # the long requests' first token is bounded below by their own prefill
+    # compute whichever mode runs it — the serving question is what their
+    # *presence* does to everyone else's first token.
+    short = min(plens) if plens else plen
+    ttft_i = sorted(h.metrics["ttft"] for h in handles
+                    if not h.rejected and h.metrics["ttft"] is not None
+                    and h.metrics["prompt_len"] == short)
     mem = s.get("memory", {})
     return {
         "rate_rps": rate,
         "n_requests": n_requests,
         "deadline_s": deadline_s,
+        "chunk_len": chunk_len,
         "p50_s": _percentile(lat, 0.50),
         "p99_s": _percentile(lat, 0.99),
+        "ttft_p50_s": _percentile(ttft, 0.50),
+        "ttft_p99_s": _percentile(ttft, 0.99),
+        "ttft_p50_interactive_s": _percentile(ttft_i, 0.50),
+        "ttft_p99_interactive_s": _percentile(ttft_i, 0.99),
         "tokens_per_s": s["tokens_out"] / wall if wall > 0 else 0.0,
         "mean_batch_occupancy": s["mean_occupancy"],
         "rejection_rate": s["rejected"] / max(1, s["submitted"]),
@@ -136,12 +166,75 @@ def run(*, arch: str = "qwen1.5-4b", n_requests: int = 24, plen: int = 8,
         paged=PagedSpec(block_len=block_len), **common)
     sweep.append(paged_pass)
     contiguous_pass = sweep[len(rates) - 1]
+    # Mixed long/short-prompt sweep + the chunked-vs-whole cell: a burst of
+    # long-context prompts (256×plen) with short interactive traffic
+    # arriving behind it.  Whole-prompt mode runs the long bucket's
+    # monolithic prefill Program in the middle of the interactive requests'
+    # path — their *first* token waits for the whole multi-second program
+    # to leave the device.  Chunked mode dissolves that prefill into the
+    # decode segments (chunk_len = plen_long/8 → a long prompt prefills
+    # across 8 segments, a short one in 1), so the longest program an
+    # interactive first token waits behind is one chunk-laden segment.
+    # Same seed ⇒ identical arrival trace in both modes.
+    plen_long = 256 * plen
+    chunk_len = plen_long // 8
+    mixed_mb = 2 * max_batch
+    mixed = dict(common, plens=(plen, plen_long), max_batch=mixed_mb)
+    # Warmup both kernel families at full wave width, discarded: prefill
+    # Programs jit per wave size, so an undersized warmup would leave the
+    # measured pass paying wave-of-mixed_mb compilation as fake latency.
+    for cl in (0, chunk_len):
+        _one_rate(cfg, api, params, rate=rates[-1], seed=seed + 20_000,
+                  admission=DeadlineAdmission(), deadline_s=None, chunk_len=cl,
+                  **dict(mixed, n_requests=2 * mixed_mb))
+    def best_mixed(rate, seed_, cl, reps=3):
+        # Tail latency of a single Poisson replay is noisy (a stray unwarmed
+        # wave width can inject one compile into the measured pass): report
+        # the best-of-``reps`` pass, the sweep's analog of min-of-reps
+        # timing.  Same seed each rep ⇒ identical trace.
+        cells = [_one_rate(cfg, api, params, rate=rate, seed=seed_,
+                           admission=DeadlineAdmission(), deadline_s=None,
+                           chunk_len=cl, **mixed)
+                 for _ in range(reps)]
+        return min(cells, key=lambda c: c["ttft_p99_interactive_s"])
+
+    mixed_sweep = [best_mixed(rate, seed + 100 + i, 0)
+                   for i, rate in enumerate(rates)]
+    whole_cell = mixed_sweep[-1]
+    chunked_cell = best_mixed(rates[-1], seed + 100 + len(rates) - 1,
+                              chunk_len)
+    mixed_sweep.append(chunked_cell)
     return {
         "arch": arch,
         "config": {"n_requests": n_requests, "prompt_len": plen, "gen": gen,
                    "seg_len": seg_len, "max_batch": max_batch,
-                   "paged_block_len": block_len},
+                   "paged_block_len": block_len,
+                   "mixed_prompt_lens": [plen, plen_long],
+                   "mixed_max_batch": mixed_mb,
+                   "chunk_len": chunk_len},
         "sweep": sweep,
+        "mixed_sweep": mixed_sweep,
+        "chunked_vs_whole": {
+            "rate_rps": rates[-1],
+            "chunk_len": chunk_len,
+            "prompt_lens": [plen, plen_long],
+            # Headline comparison: p99 TTFT of the *interactive* (short)
+            # class — the long requests' first token is bounded by their
+            # own prefill compute in either mode; what chunking removes is
+            # the monolithic program everyone ELSE's first token waits
+            # behind.
+            "whole_ttft_p50_s": whole_cell["ttft_p50_interactive_s"],
+            "whole_ttft_p99_s": whole_cell["ttft_p99_interactive_s"],
+            "chunked_ttft_p50_s": chunked_cell["ttft_p50_interactive_s"],
+            "chunked_ttft_p99_s": chunked_cell["ttft_p99_interactive_s"],
+            "ttft_p99_ratio": (whole_cell["ttft_p99_interactive_s"]
+                               / max(1e-9,
+                                     chunked_cell["ttft_p99_interactive_s"])),
+            "whole_tokens_per_s": whole_cell["tokens_per_s"],
+            "chunked_tokens_per_s": chunked_cell["tokens_per_s"],
+            "tokens_per_s_ratio": (chunked_cell["tokens_per_s"]
+                                   / max(1e-9, whole_cell["tokens_per_s"])),
+        },
         "paged_vs_contiguous": {
             "rate_rps": rates[-1],
             "paged_kv_bytes_allocated": paged_pass["kv_bytes_allocated"],

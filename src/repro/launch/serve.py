@@ -130,6 +130,7 @@ def run_server(cfg, api, params, args) -> None:
         max_wait_ms=args.max_wait_ms,
         paged=paged,
         draft=_make_draft(cfg, params, args),
+        chunk_len=args.chunk_len,
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
     t0 = time.perf_counter()
@@ -208,6 +209,13 @@ def main() -> None:
                          "+ prefix cache; forces one group + Static)")
     ap.add_argument("--block-len", type=int, default=4,
                     help="tokens per KV block in --paged mode")
+    ap.add_argument("--chunk-len", type=int, default=0,
+                    help="chunked prefill (server mode): advance each "
+                         "prompt this many tokens per decode segment "
+                         "inside the mixed-phase segment Program instead "
+                         "of running a whole-prompt prefill Program "
+                         "(0 = off, the legacy prefill/decode barrier). "
+                         "Outputs stay bit-identical (--verify holds)")
     ap.add_argument("--draft", default="",
                     help="speculative decoding draft (server mode): 'self' "
                          "(target params; acceptance ~1), 'reduced' (fresh "

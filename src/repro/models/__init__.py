@@ -6,10 +6,14 @@
     api.forward_train(params, batch, cfg) -> scalar loss
     api.prefill(params, batch, cfg, cache)-> (logits, cache)
     api.decode(params, token, pos, cfg, cache) -> (logits, cache)
+    api.prefill_chunk(params, tokens, posv, valid, cfg, cache, last_idx)
+        -> (logits, cache)   # mixed-phase chunked prefill; None when the
+                             # family has no chunked path (validate_chunked
+                             # gates serving accordingly)
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 
 class ModelAPI(NamedTuple):
@@ -18,13 +22,16 @@ class ModelAPI(NamedTuple):
     forward_train: Callable
     prefill: Callable
     decode: Callable
+    prefill_chunk: Optional[Callable] = None
 
 
 def get_model(cfg) -> ModelAPI:
     if cfg.family in ("dense", "moe", "vlm", "ssm"):
         from repro.models import transformer as T
 
-        return ModelAPI(T.param_spec, T.cache_spec, T.forward_train, T.prefill, T.decode)
+        chunk = T.prefill_chunk if cfg.family != "ssm" else None
+        return ModelAPI(T.param_spec, T.cache_spec, T.forward_train, T.prefill,
+                        T.decode, chunk)
     if cfg.family == "hybrid":
         from repro.models import rglru as R
 

@@ -219,6 +219,119 @@ def _paged_write(cache, kt, vt, positions, window):
     }
 
 
+def chunk_step(p, x, posv, valid, cfg, cache, *, window=0):
+    """Mixed-phase prefill chunk: Sq prompt tokens per slot at consecutive
+    positions ``posv .. posv+Sq-1``, row-masked by ``valid`` (B, Sq).
+    Invalid rows (past the slot's prompt end, or rows of slots already
+    decoding — their cursor sits at the prompt length, so every row fails
+    ``valid``) neither write the cache nor leave attendable keys; their
+    outputs are garbage and callers must not consume them.  Valid rows
+    scatter-then-attend exactly like :func:`decode_step`, so each attends
+    precisely the keys the whole-prompt prefill row at the same position
+    would — that is what carries the bit-identity contract across the
+    chunk/whole seam (DESIGN.md §12)."""
+    b, sq = x.shape[0], x.shape[1]
+    posv = pos_vector(posv, b)
+    positions = posv[:, None] + jnp.arange(sq, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    if "table" in cache:
+        new_cache = _paged_chunk_write(cache, k, v, positions, valid)
+    else:
+        cs = cache["k"].shape[1]
+        # Invalid rows scatter out of bounds and are dropped — the same
+        # mechanism exited slots' decode writes rely on.
+        slot = jnp.where(valid, positions, cs)
+        bidx = jnp.arange(b)[:, None]
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(
+                k.astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[bidx, slot].set(
+                v.astype(cache["v"].dtype), mode="drop"),
+            "pos": cache["pos"].at[bidx, slot].set(
+                positions.astype(cache["pos"].dtype), mode="drop"),
+        }
+    out = chunk_attention(q, new_cache, posv, cfg, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _paged_chunk_write(cache, kt, vt, positions, valid):
+    """Masked paged scatter for chunk rows: invalid rows are redirected to
+    the pool's sink block (block 0 — reserved, never addressed by a live
+    table) instead of writing through the slot's table.  The tile clamp
+    only guards the table *gather*; masking happens on the resolved
+    physical block, so a slot's real table entries are never doctored."""
+    bl = cache["k"].shape[1]
+    nmax = cache["table"].shape[1]
+    blk = jnp.minimum(positions // bl, nmax - 1)
+    off = positions % bl
+    bidx = jnp.arange(positions.shape[0])[:, None]
+    phys = jnp.where(valid, cache["table"][bidx, blk], 0)
+    return {
+        **cache,
+        "k": cache["k"].at[phys, off].set(kt.astype(cache["k"].dtype)),
+        "v": cache["v"].at[phys, off].set(vt.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[phys, off].set(positions.astype(cache["pos"].dtype)),
+    }
+
+
+def chunk_attention(q, cache, posv, cfg, *, window=0):
+    """Attention for mixed-phase prefill-chunk rows over the cache as
+    stored: row j of slot b attends recorded positions ``<= posv[b]+j``.
+
+    Dispatch mirrors :func:`cached_attention` with one deliberate
+    difference: the Pallas tile size is the prefill kernel's 128, NOT
+    ``cfg.decode_block`` — the one-shot reference for a chunk row is a
+    ``flash_attention`` prefill row whose KV tiles partition at 128, and
+    equal tile partitions (plus the exact-zero masked tail) are what make
+    chunk rows bitwise equal to prefill rows.  Paged caches gather their
+    blocks to the logical contiguous layout first for the same reason:
+    ``flash_decode_paged`` tiles at block_len, which would break parity."""
+    posv = pos_vector(posv, q.shape[0])
+    if "table" in cache:
+        tbl = cache["table"]
+        b, nmax = tbl.shape
+        bl = cache["k"].shape[1]
+
+        def gather(pool):
+            return pool[tbl].reshape((b, nmax * bl) + pool.shape[2:])
+
+        k, v, kpos = gather(cache["k"]), gather(cache["v"]), gather(cache["pos"])
+    else:
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+    if cfg.kernel_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.flash_decode(
+            q, k, v, kpos, posv, window=window, block_k=128,
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+    return _chunk_dense(q, k, v, kpos, posv, window=window)
+
+
+def _chunk_dense(q, k, v, kpos, posv, *, window=0):
+    """Dense chunk attention: ``layers.naive_attention``'s exact term order
+    (the whole-prompt prefill reference — materialized repeat_kv, full
+    softmax) with the positional causal mask replaced by the recorded-
+    position mask.  On the cache invariant that logical index i only ever
+    holds kpos ∈ {i, −1}, the two masks select identical key sets, and the
+    masked tail contributes exact zeros to the (sequential) softmax sums —
+    so chunk rows are bit-identical to prefill rows.  NOT ``_ragged_dense``
+    (grouped-GQA einsum): the reference here is the prefill path, not the
+    decode path."""
+    b, sq, h, hd = q.shape
+    n_rep = h // k.shape[2]
+    kk = L.repeat_kv(k.astype(q.dtype), n_rep)
+    vv = L.repeat_kv(v.astype(q.dtype), n_rep)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    rowpos = posv[:, None] + jnp.arange(sq, dtype=jnp.int32)  # (B, Sq)
+    mask = ragged_valid_mask(kpos[:, None, :], rowpos[:, :, None], window)
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+
+
 def ragged_valid_mask(kpos, pos, window: int):
     """THE ragged-decode validity predicate, shared by every decode path
     (dense fallback, seq-sharded mesh combine, and the Pallas kernel — the

@@ -191,6 +191,9 @@ def moe_block_apply(p, x, positions, cfg, *, mode, cache=None, pos=None, prefix_
         new_cache = None  # replaced by aux loss below
     elif mode == "prefill":
         a, new_cache = A.prefill_with_cache(p["attn"], h, positions, cfg, cache, prefix_len=prefix_len)
+    elif mode == "chunk":  # mixed-phase prefill chunk; pos = (posv, valid)
+        posv, valid = pos
+        a, new_cache = A.chunk_step(p["attn"], h, posv, valid, cfg, cache)
     else:
         a, new_cache = A.decode_step(p["attn"], h, pos, cfg, cache)
     x = x + a

@@ -50,6 +50,9 @@ def dense_block_apply(p, x, positions, cfg, *, mode, cache=None, pos=None, prefi
         a, new_cache = A.prefill_with_cache(
             p["attn"], h, positions, cfg, cache, window=cfg.window, prefix_len=prefix_len
         )
+    elif mode == "chunk":  # mixed-phase prefill chunk; pos = (posv, valid)
+        posv, valid = pos
+        a, new_cache = A.chunk_step(p["attn"], h, posv, valid, cfg, cache, window=cfg.window)
     else:  # decode
         a, new_cache = A.decode_step(p["attn"], h, pos, cfg, cache, window=cfg.window)
     x = x + a
@@ -229,6 +232,23 @@ def prefill(params, batch, cfg, cache):
     x, cache = run_stack(params, x, positions, cfg, mode="prefill", cache=cache, prefix_len=prefix_len)
     logits = logits_fn(params, x[:, -1:], cfg)
     return logits, cache
+
+
+def prefill_chunk(params, tokens, posv, valid, cfg, cache, last_idx):
+    """Advance mixed-phase prefill cursors by one chunk (chunked prefill —
+    some slots of the batch may be decoding instead; their rows arrive
+    fully masked).  tokens: (B, L) prompt slice per slot; posv: (B,) cursor
+    base positions; valid: (B, L) row mask (``False`` past the slot's
+    prompt end); last_idx: (B,) row index of each slot's final prompt
+    position within this chunk (clipped — only meaningful for slots whose
+    prompt completes here).  Returns (logits (B, 1, V) at ``last_idx``,
+    new_cache): the logits row is the slot's first generated token's
+    distribution, bit-identical to ``prefill``'s last-row logits."""
+    x = embed_tokens(params, tokens, cfg)
+    x, cache = run_stack(params, x, None, cfg, mode="chunk", cache=cache,
+                         pos=(posv, valid))
+    x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)  # (B,1,d)
+    return logits_fn(params, x_last, cfg), cache
 
 
 def decode(params, token, pos, cfg, cache):

@@ -8,6 +8,7 @@ from repro.serve.batcher import (  # noqa: F401
     BatchGroup,
     Buckets,
     ModelKernels,
+    chunks_for,
     segments_for,
     spec_segments_for,
 )
@@ -22,11 +23,13 @@ from repro.serve.server import (  # noqa: F401
     InferenceServer,
     RequestHandle,
     ServeError,
+    validate_chunked,
     validate_draft,
 )
 from repro.serve.step import (  # noqa: F401
     DraftSpec,
     cache_batch_axes,
+    make_chunk_step,
     make_decode_chain,
     make_decode_step,
     make_draft_verify_step,

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import math
 import threading
+from collections import deque
 from typing import Dict, Optional, Tuple
 
 
@@ -94,9 +95,11 @@ class DeadlineAdmission:
     conservatively early."""
 
     def __init__(self, model: Optional[ServiceModel] = None, *,
-                 slack: float = 1.0) -> None:
+                 slack: float = 1.0, record_cap: int = 256) -> None:
         self.model = model or ServiceModel()
         self.slack = slack
+        self._dlock = threading.Lock()
+        self._decisions: deque = deque(maxlen=record_cap)
 
     # -- forecast ---------------------------------------------------------
     def forecast(self, bucket: int, segments_left: int,
@@ -112,16 +115,62 @@ class DeadlineAdmission:
             total += pre if pre is not None else 0.0
         return total
 
+    def ttft_forecast(self, bucket: int, n_chunks: int = 0) -> Optional[float]:
+        """Optimistic seconds to first token.  Whole-prompt serving
+        (``n_chunks = 0``): the prefill-run EMA.  Chunked prefill: the
+        prompt advances one chunk per decode segment, so the first token
+        arrives after ``n_chunks`` segments — ``n_chunks ×`` the
+        segment-rate EMA.  None while the needed rate is unobserved."""
+        if n_chunks > 0:
+            seg = self.model.estimate("segment", bucket)
+            return None if seg is None else n_chunks * seg
+        return self.model.estimate("prefill", bucket)
+
     def admit(self, now: float, deadline: Optional[float], bucket: int,
-              segments_left: int, *, include_prefill: bool = True) -> bool:
+              segments_left: int, *, include_prefill: bool = True,
+              n_chunks: int = 0) -> bool:
         """True = admit.  Deadline-less requests and cold buckets always
-        board; otherwise the no-contention forecast must fit the budget."""
-        if deadline is None:
-            return True
-        est = self.forecast(bucket, segments_left, include_prefill=include_prefill)
-        if est is None:
-            return True
-        return now + est * self.slack <= deadline
+        board; otherwise the no-contention forecast must fit the budget.
+
+        ``n_chunks`` > 0 switches to chunked-prefill accounting: the
+        prompt's chunks are extra decode segments (there is no prefill run
+        to add), so the completion forecast covers ``segments_left +
+        n_chunks`` segments.  Every decision is recorded with its TTFT
+        forecast and chunk count (``stats``)."""
+        if n_chunks > 0:
+            include_prefill = False
+            segments_left = segments_left + n_chunks
+        ok = True
+        if deadline is not None:
+            est = self.forecast(bucket, segments_left,
+                                include_prefill=include_prefill)
+            if est is not None:
+                ok = now + est * self.slack <= deadline
+        with self._dlock:
+            self._decisions.append({
+                "bucket": bucket,
+                "n_chunks": n_chunks,
+                "ttft_forecast_s": self.ttft_forecast(bucket, n_chunks),
+                "admitted": ok,
+            })
+        return ok
+
+    def stats(self) -> dict:
+        """Operator-facing snapshot of recent admission decisions: each
+        carries its per-request TTFT forecast and chunk count (chunked
+        prefill forecasts TTFT as chunks × segment rate rather than one
+        whole-prompt prefill run)."""
+        with self._dlock:
+            recent = list(self._decisions)
+        admitted = sum(1 for d in recent if d["admitted"])
+        ttfts = [d["ttft_forecast_s"] for d in recent
+                 if d["ttft_forecast_s"] is not None]
+        return {
+            "decisions": recent[-32:],
+            "admitted": admitted,
+            "rejected": len(recent) - admitted,
+            "ttft_forecast_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
+        }
 
 
 class PoolAdmission:

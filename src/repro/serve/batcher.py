@@ -58,11 +58,19 @@ from repro.core.program import Program
 from repro.serve.step import (
     DraftSpec,
     cache_batch_axes,
+    make_chunk_step,
     make_decode_step,
     make_draft_verify_step,
     make_prefill_step,
     zeros_cache,
 )
+
+
+def chunks_for(bucket: int, chunk_len: int, start: int = 0) -> int:
+    """Mixed-phase segments a prompt needs before its first token: the
+    prefill cursor advances ``chunk_len`` positions per segment from
+    ``start`` (> 0 when a paged prefix hit skips leading whole blocks)."""
+    return max(0, math.ceil((bucket - start) / max(1, chunk_len)))
 
 
 class Buckets:
@@ -287,6 +295,124 @@ class ModelKernels:
         self._seg_fns[key] = seg
         return seg
 
+    # ------------------------------------------------- mixed-phase kernels
+    #
+    # Chunked prefill: the decode segment Program doubles as the prefill
+    # engine.  Each segment first advances every still-prefilling slot's
+    # cursor by one chunk (``lax.cond``-gated — a segment with no prefilling
+    # slot pays one predicate, keeping steady-state decode throughput within
+    # noise of the unchunked kernel), then runs the ordinary decode scan
+    # over all slots.  A slot whose prefill completes in a segment emits
+    # only ``ctok`` (its first generated token, from the chunk's final
+    # prompt row) that segment and starts decoding the next one — so the
+    # decode scan's phase mask is the cursor as of segment entry, and the
+    # still-prefilling slots' token/pos carries are restored after the scan
+    # (their in-scan decode writes land at positions >= bucket, which real
+    # decode later overwrites before anything attends them).
+
+    def mixed_segment_kernel(self, seg_len: int, bucket: int,
+                             chunk_len: int) -> Callable:
+        """``fn(offset, tok, pos, pcur, ptoks, *cache_leaves) ->
+        (toks[b, seg_len], tok', pos', pcur', ctok, *cache_leaves')`` —
+        one chunk stage + ``seg_len`` decode steps.  ``pcur``: (b, 1)
+        prefill cursor (``>= bucket`` ⇒ decoding); ``ptoks``: (b, bucket)
+        padded-prompt buffer (pure input: uploaded once per join, served
+        from the transfer cache every segment after)."""
+        key = ("mixed", seg_len, bucket, chunk_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        decode = make_decode_step(self.cfg, self.api)
+        chunk = make_chunk_step(self.cfg, self.api, bucket, chunk_len)
+        params, treedef, bax = self.params, self.treedef, self.bax
+        tu = jax.tree_util
+
+        def seg(offset, tok, pos, pcur, ptoks, *leaves):
+            cache = tu.tree_unflatten(treedef, leaves)
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), cache, bax)
+            decoding = pcur >= bucket  # (b, 1), phase at segment entry
+
+            def run_chunk(cache):
+                return chunk(params, cache, ptoks, pcur)
+
+            def skip_chunk(cache):
+                return jnp.zeros_like(tok), pcur, cache
+
+            ctok, pcur2, cache = jax.lax.cond(
+                jnp.any(~decoding), run_chunk, skip_chunk, cache)
+
+            def body(carry, _):
+                tok, pos, cache = carry
+                ntok, cache = decode(params, cache, tok, pos[:, 0])
+                return (ntok, pos + 1, cache), ntok[:, 0]
+
+            (tok2, pos2, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), None, length=seg_len
+            )
+            completed = ~decoding & (pcur2 >= bucket)
+            tok_out = jnp.where(decoding, tok2, jnp.where(completed, ctok, tok))
+            pos_out = jnp.where(decoding, pos2, pos)
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), cache, bax)
+            return (jnp.swapaxes(toks, 0, 1), tok_out, pos_out, pcur2, ctok,
+                    *tu.tree_leaves(cache))
+
+        self._seg_fns[key] = seg
+        return seg
+
+    def paged_mixed_segment_kernel(self, seg_len: int, bucket: int,
+                                   chunk_len: int) -> Callable:
+        """Paged variant: ``fn(offset, tok, pos, pcur, ptoks, table,
+        *pool_leaves) -> (toks, tok', pos', pcur', ctok, *pool_leaves')``.
+        Chunk writes resolve physical blocks through the table exactly like
+        decode writes (invalid rows land in the sink block)."""
+        key = ("paged_mixed", seg_len, bucket, chunk_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        decode = make_decode_step(self.cfg, self.api)
+        chunk = make_chunk_step(self.cfg, self.api, bucket, chunk_len)
+        params, treedef, bax = self.params, self.treedef, self.bax
+        n_layers = self.cfg.n_layers
+        tu = jax.tree_util
+
+        def seg(offset, tok, pos, pcur, ptoks, table, *leaves):
+            cache = tu.tree_unflatten(treedef, leaves)
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), cache, bax)
+            cache = dict(cache)
+            cache["table"] = jnp.broadcast_to(
+                table[None], (n_layers,) + table.shape
+            )
+            decoding = pcur >= bucket
+
+            def run_chunk(cache):
+                return chunk(params, cache, ptoks, pcur)
+
+            def skip_chunk(cache):
+                return jnp.zeros_like(tok), pcur, cache
+
+            ctok, pcur2, cache = jax.lax.cond(
+                jnp.any(~decoding), run_chunk, skip_chunk, cache)
+
+            def body(carry, _):
+                tok, pos, cache = carry
+                ntok, cache = decode(params, cache, tok, pos[:, 0])
+                return (ntok, pos + 1, cache), ntok[:, 0]
+
+            (tok2, pos2, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), None, length=seg_len
+            )
+            completed = ~decoding & (pcur2 >= bucket)
+            tok_out = jnp.where(decoding, tok2, jnp.where(completed, ctok, tok))
+            pos_out = jnp.where(decoding, pos2, pos)
+            cache = dict(cache)
+            cache.pop("table")
+            cache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), cache, bax)
+            return (jnp.swapaxes(toks, 0, 1), tok_out, pos_out, pcur2, ctok,
+                    *tu.tree_leaves(cache))
+
+        self._seg_fns[key] = seg
+        return seg
+
     def prefill_kernel(self, max_seq: int) -> Callable:
         """``fn(offset, tokens[b, S_b]) -> (tok0[b, 1], *slot_leading_cache)``
         — batched prefill against a fresh ``zeros_cache``; rows are
@@ -417,6 +543,129 @@ class ModelKernels:
         self._seg_fns[key] = seg
         return seg
 
+    def _mixed_chunk_stage(self, bucket: int, chunk_len: int):
+        """Shared chunk stage for the speculative mixed kernels: advances
+        BOTH caches' prompt state — the target via the bit-identity chunk
+        path, the draft via the same masked chunk path (its logits are
+        discarded; draft-cache content only moves the acceptance rate,
+        never emitted bits)."""
+        chunk = make_chunk_step(self.cfg, self.api, bucket, chunk_len)
+        dchunk = make_chunk_step(self.draft.cfg, self.dapi, bucket, chunk_len)
+        params, dparams = self.params, self.draft.params
+
+        def stage(tok, pcur, ptoks, tcache, dcache, decoding):
+            def run(op):
+                tc, dc = op
+                ctok, pcur2, tc = chunk(params, tc, ptoks, pcur)
+                _, _, dc = dchunk(dparams, dc, ptoks, pcur)
+                return ctok, pcur2, tc, dc
+
+            def skip(op):
+                tc, dc = op
+                return jnp.zeros_like(tok), pcur, tc, dc
+
+            return jax.lax.cond(jnp.any(~decoding), run, skip,
+                                (tcache, dcache))
+
+        return stage
+
+    def spec_mixed_segment_kernel(self, seg_len: int, bucket: int,
+                                  chunk_len: int) -> Callable:
+        """Speculative mixed segment: ``fn(offset, tok, ptok, pos, pcur,
+        ptoks, *target_leaves, *draft_leaves) -> (toks, cnt, tok', ptok',
+        pos', pcur', ctok, *leaves')``.  A slot completing prefill leaves
+        the segment with ``tok' = ctok`` and ``ptok' = ptoks[:, bucket-1]``
+        (the prompt's last token — the predecessor the first draft step
+        re-decodes), starting draft/verify next segment."""
+        key = ("spec_mixed", seg_len, bucket, chunk_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        step = self._spec_step()
+        stage = self._mixed_chunk_stage(bucket, chunk_len)
+        treedef, bax = self.treedef, self.bax
+        dtreedef, dbax = self.dtreedef, self.dbax
+        nt = len(self.bax_leaves)
+        tu = jax.tree_util
+
+        def seg(offset, tok, ptok, pos, pcur, ptoks, *leaves):
+            tcache = tu.tree_unflatten(treedef, leaves[:nt])
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
+            dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
+            decoding = pcur >= bucket
+            ctok, pcur2, tcache, dcache = stage(
+                tok, pcur, ptoks, tcache, dcache, decoding)
+            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._spec_scan(
+                seg_len, step, tok, ptok, pos, tcache, dcache
+            )
+            completed = ~decoding & (pcur2 >= bucket)
+            last_ptok = ptoks[:, bucket - 1:bucket]
+            tok_out = jnp.where(decoding, tok2, jnp.where(completed, ctok, tok))
+            ptok_out = jnp.where(decoding, ptok2,
+                                 jnp.where(completed, last_ptok, ptok))
+            pos_out = jnp.where(decoding, pos2, pos)
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), tcache, bax)
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), dcache, dbax)
+            return (buf, cnt, tok_out, ptok_out, pos_out, pcur2, ctok,
+                    *tu.tree_leaves(tcache), *tu.tree_leaves(dcache))
+
+        self._seg_fns[key] = seg
+        return seg
+
+    def paged_spec_mixed_segment_kernel(self, seg_len: int, bucket: int,
+                                        chunk_len: int) -> Callable:
+        """Paged-target speculative mixed segment: ``fn(offset, tok, ptok,
+        pos, pcur, ptoks, table, *pool_leaves, *draft_leaves) -> (toks,
+        cnt, tok', ptok', pos', pcur', ctok, *leaves')``."""
+        key = ("paged_spec_mixed", seg_len, bucket, chunk_len)
+        fn = self._seg_fns.get(key)
+        if fn is not None:
+            return fn
+        step = self._spec_step()
+        stage = self._mixed_chunk_stage(bucket, chunk_len)
+        treedef, bax = self.treedef, self.bax
+        dtreedef, dbax = self.dtreedef, self.dbax
+        nt = len(self.bax_leaves)
+        n_layers = self.cfg.n_layers
+        tu = jax.tree_util
+
+        def seg(offset, tok, ptok, pos, pcur, ptoks, table, *leaves):
+            tcache = tu.tree_unflatten(treedef, leaves[:nt])
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
+            tcache = dict(tcache)
+            tcache["table"] = jnp.broadcast_to(
+                table[None], (n_layers,) + table.shape
+            )
+            dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
+            decoding = pcur >= bucket
+            ctok, pcur2, tcache, dcache = stage(
+                tok, pcur, ptoks, tcache, dcache, decoding)
+            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._spec_scan(
+                seg_len, step, tok, ptok, pos, tcache, dcache
+            )
+            completed = ~decoding & (pcur2 >= bucket)
+            last_ptok = ptoks[:, bucket - 1:bucket]
+            tok_out = jnp.where(decoding, tok2, jnp.where(completed, ctok, tok))
+            ptok_out = jnp.where(decoding, ptok2,
+                                 jnp.where(completed, last_ptok, ptok))
+            pos_out = jnp.where(decoding, pos2, pos)
+            tcache = dict(tcache)
+            tcache.pop("table")
+            tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), tcache, bax)
+            dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), dcache, dbax)
+            return (buf, cnt, tok_out, ptok_out, pos_out, pcur2, ctok,
+                    *tu.tree_leaves(tcache), *tu.tree_leaves(dcache))
+
+        self._seg_fns[key] = seg
+        return seg
+
+    def draft_leaf_neg_init(self, max_seq: int) -> List[bool]:
+        """Draft-cache analog of :meth:`leaf_neg_init` (chunked joins reset
+        position leaves of BOTH caches in place of a prefill rewrite)."""
+        return [s.init == "neg_ones" for s in self._draft_leaf_specs(max_seq)]
+
     def spec_prefill_kernel(self, max_seq: int) -> Callable:
         """Prefill for speculative slots: runs the target *and* the draft
         prefill over the same prompt rows, so a joining slot lands with both
@@ -457,7 +706,8 @@ class BatchGroup:
     threads only touch the handles (and fire done-callbacks)."""
 
     def __init__(self, kernels: ModelKernels, runtime, scheduler,
-                 bucket: int, n_slots: int, seg_len: int, max_seq: int) -> None:
+                 bucket: int, n_slots: int, seg_len: int, max_seq: int,
+                 chunk_len: int = 0) -> None:
         self.kernels = kernels
         self.runtime = runtime
         self.scheduler = scheduler
@@ -465,6 +715,7 @@ class BatchGroup:
         self.n_slots = n_slots
         self.seg_len = seg_len
         self.max_seq = max_seq
+        self.chunk_len = chunk_len  # 0 = whole-prompt prefill Programs
         self.spec_k = kernels.spec_k  # draft depth; 0 = speculation off
         self.slots: List[Optional[object]] = [None] * n_slots  # _Request per slot
         self.dead = False
@@ -487,6 +738,9 @@ class BatchGroup:
         tok = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots, 1), np.int32)
         leaves = kernels.leaf_mirrors(n_slots, self.max_seq)
+        if self.chunk_len:
+            self._build_mixed_program(tok, pos, leaves)
+            return
         if self.spec_k:
             # Speculative layout: a predecessor-token buffer joins the
             # carry (the first draft step re-decodes [ptok, tok] to repair
@@ -540,6 +794,65 @@ class BatchGroup:
             (2 + i, 3 + i) for i in range(self.n_leaves)
         ]
 
+    def _build_mixed_program(self, tok, pos, leaves) -> None:
+        """Mixed-phase (chunked-prefill) segment Program.  Two extra carried
+        buffers join the layout: ``pcur`` (the per-slot prefill cursor,
+        ping-ponged — initialized to ``bucket`` so empty slots read as
+        decoding and the chunk stage's ``lax.cond`` stays cold) and
+        ``ptoks`` (the padded-prompt buffer, a pure non-donated input: one
+        upload per join, transfer-cache hits every segment after).  ``ctok``
+        (each slot's first generated token, meaningful the segment its
+        prefill completes) is a pure output, never swapped."""
+        kernels, n_slots, seg_len = self.kernels, self.n_slots, self.seg_len
+        pcur = np.full((n_slots, 1), self.bucket, np.int32)
+        ptoks = np.zeros((n_slots, self.bucket), np.int32)
+        if self.spec_k:
+            k = self.spec_k
+            ptok = np.zeros((n_slots, 1), np.int32)
+            leaves = leaves + kernels.draft_leaf_mirrors(n_slots, self.max_seq)
+            toks_seg = np.zeros((n_slots, seg_len * (k + 1)), np.int32)
+            prog = Program().in_(tok).in_(ptok).in_(pos).in_(pcur).in_(ptoks)
+            for b in leaves:
+                prog.in_(b)
+            prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
+            prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
+            prog.out(np.zeros_like(pos)).out(np.zeros_like(pcur))
+            prog.out(np.zeros_like(tok))  # ctok
+            for b in leaves:
+                prog.out(np.zeros_like(b))
+            prog.kernel(
+                kernels.spec_mixed_segment_kernel(seg_len, self.bucket,
+                                                  self.chunk_len),
+                f"spec_mixed_seg{seg_len}_b{self.bucket}_c{self.chunk_len}_k{k}")
+            prog.donate(*range(5, 5 + len(leaves)))
+            prog.work_items(n_slots, 1)
+            self.prog = prog
+            self.n_leaves = len(leaves)
+            self._swap_pairs = [(0, 2), (1, 3), (2, 4), (3, 5)] + [
+                (5 + i, 7 + i) for i in range(self.n_leaves)
+            ]
+            self._ctok_out = 6
+            return
+        toks_seg = np.zeros((n_slots, seg_len), np.int32)
+        prog = Program().in_(tok).in_(pos).in_(pcur).in_(ptoks)
+        for b in leaves:
+            prog.in_(b)
+        prog.out(toks_seg).out(np.zeros_like(tok)).out(np.zeros_like(pos))
+        prog.out(np.zeros_like(pcur)).out(np.zeros_like(tok))  # pcur', ctok
+        for b in leaves:
+            prog.out(np.zeros_like(b))
+        prog.kernel(
+            kernels.mixed_segment_kernel(seg_len, self.bucket, self.chunk_len),
+            f"mixed_seg{seg_len}_b{self.bucket}_c{self.chunk_len}")
+        prog.donate(*range(4, 4 + len(leaves)))
+        prog.work_items(n_slots, 1)
+        self.prog = prog
+        self.n_leaves = len(leaves)
+        self._swap_pairs = [(0, 1), (1, 2), (2, 3)] + [
+            (4 + i, 5 + i) for i in range(self.n_leaves)
+        ]
+        self._ctok_out = 4
+
     # ------------------------------------------------------------- queries
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -564,7 +877,7 @@ class BatchGroup:
         """KV memory accounting, comparable across layouts: contiguous
         groups allocate their full capacity up front (every slot row at
         ``max_seq``, whatever depth is recorded)."""
-        first_leaf = 3 if self.spec_k else 2
+        first_leaf = (3 if self.spec_k else 2) + (2 if self.chunk_len else 0)
         allocated = sum(b.nbytes for b in self.prog._ins[first_leaf:])
         capacity = self.n_slots * self.max_seq
         return {
@@ -592,6 +905,20 @@ class BatchGroup:
         assert len(requests) <= len(self.free_slots())
         self.prefill_wave = list(requests)
         self._prefill_t0 = _now()
+        if self.chunk_len:
+            # Chunked mode: there is no prefill Program — joining slots are
+            # armed host-side (merge) and the segment kernel's chunk stage
+            # does the prefill compute.  Planning still runs (the paged
+            # override pins whole-prompt cache hits there); the join state
+            # machine completes through an already-done handle.
+            from repro.serve.paged import _DoneHandle
+
+            self._plan_prefill(requests)
+            self._prefill_prog = None
+            h = _DoneHandle()
+            self.prefill_handle = h
+            h.add_done_callback(lambda _h: notify())
+            return
         rows = self._plan_prefill(requests)
         if not rows:
             # Every request hit the whole-prompt cache: nothing to run, but
@@ -637,6 +964,8 @@ class BatchGroup:
         if h.has_errors():
             return {"joined": 0, "failed": list(wave), "errors": h.errors(),
                     "seconds": seconds}
+        if self.chunk_len:
+            return self._merge_chunked(wave, seconds)
         free = self.free_slots()
         if self.spec_k:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
@@ -662,6 +991,50 @@ class BatchGroup:
         self.tokens_written += len(wave) * min(self.bucket, self.max_seq)
         for b in self.prog._ins:
             self.prog.invalidate(b)
+        return {"joined": len(wave), "failed": [], "seconds": seconds}
+
+    def _merge_chunked(self, wave, seconds: float) -> dict:
+        """Board a chunked join wave without a prefill Program: arm each
+        request's slot for the segment kernel's chunk stage — cursor 0,
+        prompt row uploaded, position leaves reset to −1 (empty; stale k/v
+        under kpos −1 is never attended, so the big value leaves stay
+        device-resident) — and defer ``req.board`` to the harvest of the
+        segment whose chunk completes the prompt (``ctok``).  The join
+        re-uploads only the small control buffers + position leaves instead
+        of full slot-rows of every cache leaf."""
+        free = self.free_slots()
+        if self.spec_k:
+            tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
+                                    self.prog._ins[2])
+            pcur_b, ptoks_b = self.prog._ins[3], self.prog._ins[4]
+            leaf_bufs = self.prog._ins[5:]
+            neg = (self.kernels.leaf_neg_init(self.max_seq)
+                   + self.kernels.draft_leaf_neg_init(self.max_seq))
+        else:
+            tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
+            pcur_b, ptoks_b = self.prog._ins[2], self.prog._ins[3]
+            leaf_bufs = self.prog._ins[4:]
+            neg = self.kernels.leaf_neg_init(self.max_seq)
+        for req in wave:
+            slot = free.pop(0)
+            tok_b[slot, 0] = 0
+            if ptok_b is not None:
+                ptok_b[slot, 0] = int(req.prompt[-1])
+            pos_b[slot, 0] = self.bucket
+            pcur_b[slot, 0] = 0
+            ptoks_b[slot, :] = req.prompt
+            for dst, is_neg in zip(leaf_bufs, neg):
+                if is_neg:
+                    dst[slot] = -1
+            self.slots[slot] = req
+            req.slot = slot
+            req.chunk_pos = 0
+        for b in (tok_b, ptok_b, pos_b, pcur_b, ptoks_b):
+            if b is not None:
+                self.prog.invalidate(b)
+        for dst, is_neg in zip(leaf_bufs, neg):
+            if is_neg:
+                self.prog.invalidate(dst)
         return {"joined": len(wave), "failed": [], "seconds": seconds}
 
     # ------------------------------------------------------------ segments
@@ -699,8 +1072,27 @@ class BatchGroup:
         cnt = self.prog._outs[1] if self.spec_k else None
         n_active = 0
         finished = []
-        emitted = drafted = accepted = 0
+        emitted = drafted = accepted = chunk_tokens = 0
         for slot, req in self.active():
+            if self.chunk_len and req.chunk_pos < self.bucket:
+                # Prefilling at segment entry: the chunk stage advanced the
+                # cursor deterministically — mirror it host-side.  On the
+                # segment whose chunk reaches the bucket boundary the slot's
+                # first token is in ctok (a pure, never-swapped output whose
+                # host mirror write_outputs refreshed); it boards here and
+                # decodes from the next segment on.
+                old = req.chunk_pos
+                req.chunk_pos = min(old + self.chunk_len, self.bucket)
+                chunk_tokens += req.chunk_pos - old
+                if req.chunk_pos >= self.bucket:
+                    ctok = self.prog._outs[self._ctok_out]
+                    req.board(slot, int(ctok[slot, 0]))
+                    self.tokens_written += min(self.bucket, self.max_seq)
+                    self._on_chunk_complete(slot, req)
+                    if req.remaining() <= 0:
+                        finished.append(req)
+                        self.release_slot(slot)
+                continue
             n_active += 1
             need = req.remaining()
             if self.spec_k:
@@ -723,7 +1115,15 @@ class BatchGroup:
         res = {"n_active": n_active, "finished": finished, "seconds": seconds}
         if self.spec_k:
             res["drafted"], res["accepted"] = drafted, accepted
+        if self.chunk_len:
+            res["chunk_tokens"] = chunk_tokens
         return res
+
+    def _on_chunk_complete(self, slot: int, req) -> None:
+        """Hook fired when a slot's chunked prefill completes (its prompt
+        KV is now fully written).  The paged override registers the slot's
+        prompt blocks with the prefix cache here — the earliest moment
+        their content is valid to share."""
 
     def release_slot(self, slot: int) -> None:
         """Free one KV slot (request retired or failed).  The paged variant

@@ -326,7 +326,8 @@ class PagedBatchGroup(BatchGroup):
 
     def __init__(self, kernels, runtime, scheduler, bucket: int,
                  n_slots: int, seg_len: int, max_seq: int,
-                 spec: PagedSpec, state: Optional[PoolState] = None) -> None:
+                 spec: PagedSpec, state: Optional[PoolState] = None,
+                 chunk_len: int = 0) -> None:
         self.spec = spec
         self.state = state if state is not None else PoolState()
         self.window = int(kernels.cfg.window or 0)
@@ -346,7 +347,7 @@ class PagedBatchGroup(BatchGroup):
         self.block_len = bl
         self.prefix_enabled = bool(spec.prefix_cache) and not self.window
         super().__init__(kernels, runtime, scheduler, bucket, n_slots,
-                         seg_len, max_seq)
+                         seg_len, max_seq, chunk_len=chunk_len)
 
     # ----------------------------------------------------- program assembly
     def _build_segment_program(self):
@@ -373,6 +374,9 @@ class PagedBatchGroup(BatchGroup):
         self.table = self.state.table  # all sink while no slot is boarded
         tok = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots, 1), np.int32)
+        if self.chunk_len:
+            self._build_paged_mixed(tok, pos, leaves)
+            return
         if self.spec_k:
             # Speculative layout: [tok, ptok, pos, table, *pool, *draft] —
             # the target cache stays pool-backed; the draft cache rides as
@@ -428,6 +432,73 @@ class PagedBatchGroup(BatchGroup):
         self.slot_blocks: List[Optional[List[int]]] = [None] * n_slots
         self._plans: List[_Plan] = []
 
+    def _build_paged_mixed(self, tok, pos, leaves) -> None:
+        """Chunked-prefill paged layouts: ``pcur``/``ptoks`` join the carry
+        exactly as in the contiguous mixed Program, the block table stays a
+        pure input, and chunk writes resolve physical blocks through it
+        (invalid rows land in the sink block).  Non-spec ``[tok, pos, pcur,
+        ptoks, table, *pool]``; speculative ``[tok, ptok, pos, pcur, ptoks,
+        table, *pool, *draft]``."""
+        from repro.core.program import Program
+
+        kernels, n_slots, seg_len = self.kernels, self.n_slots, self.seg_len
+        pcur = np.full((n_slots, 1), self.bucket, np.int32)
+        ptoks = np.zeros((n_slots, self.bucket), np.int32)
+        if self.spec_k:
+            k = self.spec_k
+            ptok = np.zeros((n_slots, 1), np.int32)
+            all_leaves = leaves + kernels.draft_leaf_mirrors(n_slots,
+                                                             self.max_seq)
+            toks_seg = np.zeros((n_slots, seg_len * (k + 1)), np.int32)
+            prog = (Program().in_(tok).in_(ptok).in_(pos).in_(pcur)
+                    .in_(ptoks).in_(self.table))
+            for b in all_leaves:
+                prog.in_(b)
+            prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
+            prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
+            prog.out(np.zeros_like(pos)).out(np.zeros_like(pcur))
+            prog.out(np.zeros_like(tok))  # ctok
+            for b in all_leaves:
+                prog.out(np.zeros_like(b))
+            prog.kernel(
+                kernels.paged_spec_mixed_segment_kernel(
+                    seg_len, self.bucket, self.chunk_len),
+                f"spec_pmixed_seg{seg_len}_b{self.bucket}"
+                f"_c{self.chunk_len}_k{k}")
+            prog.donate(*range(6, 6 + len(all_leaves)))
+            prog.work_items(n_slots, 1)
+            self.prog = prog
+            self.n_leaves = len(all_leaves)
+            self._swap_pairs = [(0, 2), (1, 3), (2, 4), (3, 5)] + [
+                (6 + i, 7 + i) for i in range(self.n_leaves)
+            ]
+            self._ctok_out = 6
+            self.slot_blocks = [None] * n_slots
+            self._plans = []
+            return
+        toks_seg = np.zeros((n_slots, seg_len), np.int32)
+        prog = Program().in_(tok).in_(pos).in_(pcur).in_(ptoks).in_(self.table)
+        for b in leaves:
+            prog.in_(b)
+        prog.out(toks_seg).out(np.zeros_like(tok)).out(np.zeros_like(pos))
+        prog.out(np.zeros_like(pcur)).out(np.zeros_like(tok))  # pcur', ctok
+        for b in leaves:
+            prog.out(np.zeros_like(b))
+        prog.kernel(
+            kernels.paged_mixed_segment_kernel(seg_len, self.bucket,
+                                               self.chunk_len),
+            f"pmixed_seg{seg_len}_b{self.bucket}_c{self.chunk_len}")
+        prog.donate(*range(5, 5 + len(leaves)))
+        prog.work_items(n_slots, 1)
+        self.prog = prog
+        self.n_leaves = len(leaves)
+        self._swap_pairs = [(0, 1), (1, 2), (2, 3)] + [
+            (5 + i, 5 + i) for i in range(self.n_leaves)
+        ]
+        self._ctok_out = 4
+        self.slot_blocks = [None] * n_slots
+        self._plans = []
+
     # ----------------------------------------------------------- accounting
     def blocks_for(self, gen: int) -> int:
         """Blocks a request must be able to reserve: its forecast depth —
@@ -457,6 +528,8 @@ class PagedBatchGroup(BatchGroup):
         prefill row, a wave-mate with the identical padded prompt (prefill
         runs once for the shared blocks), or a whole-prompt prefix-cache hit
         (no prefill at all — blocks pinned here, table wired at merge)."""
+        if self.chunk_len:
+            return self._plan_chunked(requests)
         plans: List[_Plan] = []
         rows: List = []
         by_prompt: Dict[bytes, _Plan] = {}
@@ -491,6 +564,29 @@ class PagedBatchGroup(BatchGroup):
         self.pool.counters["prefill_rows"] += len(rows)
         return rows
 
+    def _plan_chunked(self, requests: Sequence) -> List:
+        """Chunked planning: there are no prefill rows.  A whole-prompt
+        cache hit still boards decoding immediately (blocks pinned here,
+        table wired at merge); everything else chunks.  Wave-mate ("dup")
+        sharing is disabled — the mate's blocks hold no KV yet at plan
+        time — but completed prompts re-enter the chain/prompt caches for
+        later waves (:meth:`_on_chunk_complete`)."""
+        plans: List[_Plan] = []
+        for r in requests:
+            if self.prefix_enabled and not self.spec_k:
+                hit = self.pool.lookup_prompt(r.prompt.tobytes())
+                if hit is not None:
+                    blocks, tok0 = hit
+                    self.pool.incref(blocks)
+                    self.pool.counters["prefix_hits"] += 1
+                    self.pool.counters["prefill_rows_shared"] += 1
+                    plans.append(_Plan(r, "cached", pinned=list(blocks),
+                                       first_token=tok0))
+                    continue
+            plans.append(_Plan(r, "row"))
+        self._plans = plans
+        return []
+
     def merge_prefill(self) -> dict:
         h, wave, prog = self.prefill_handle, self.prefill_wave, self._prefill_prog
         plans, self._plans = self._plans, []
@@ -503,6 +599,8 @@ class PagedBatchGroup(BatchGroup):
                     self.pool.release(p.pinned)
             return {"joined": 0, "failed": list(wave), "errors": h.errors(),
                     "seconds": seconds}
+        if self.chunk_len:
+            return self._merge_chunked_paged(plans, seconds)
         free = self.free_slots()
         if self.spec_k:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
@@ -632,11 +730,125 @@ class PagedBatchGroup(BatchGroup):
         self._reset_kpos(fresh)
         return blocks + fresh, first, wrote or bool(fresh)
 
+    # --------------------------------------------------- chunked prefill
+    def _merge_chunked_paged(self, plans: Sequence[_Plan],
+                             seconds: float) -> dict:
+        """Board a chunked join wave: whole-prompt cache hits wire their
+        pinned blocks and board decoding at once; everything else gets its
+        block reservation (chain-cached leading full blocks advance the
+        start cursor so those positions are never re-chunked) and prefills
+        through the segment kernel's chunk stage."""
+        free = self.free_slots()
+        if self.spec_k:
+            tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
+                                    self.prog._ins[2])
+            pcur_b, ptoks_b = self.prog._ins[3], self.prog._ins[4]
+            draft_bufs = self.prog._ins[6 + self._n_pool:]
+            dneg = self.kernels.draft_leaf_neg_init(self.max_seq)
+        else:
+            tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
+            pcur_b, ptoks_b = self.prog._ins[2], self.prog._ins[3]
+            draft_bufs, dneg = [], []
+        wrote_pool = False
+        for plan in plans:
+            slot = free.pop(0)
+            req = plan.req
+            n_total = self.blocks_for(req.gen)
+            if plan.kind == "cached":
+                # Whole-prompt hit: boards decoding now, no chunk segments.
+                fresh = self.pool.alloc(n_total - len(plan.pinned))
+                self._reset_kpos(fresh)
+                blocks = plan.pinned + fresh
+                pcur0, first = self.bucket, int(plan.first_token)
+                wrote_pool |= bool(fresh)
+            else:
+                lead = self._chain_head(req)
+                fresh = self.pool.alloc(n_total - len(lead))
+                self._reset_kpos(fresh)
+                blocks = lead + fresh
+                pcur0, first = len(lead) * self.block_len, 0
+                wrote_pool = True
+            self.slot_blocks[slot] = blocks
+            self.table[slot, :] = BlockPool.NULL
+            self.table[slot, : len(blocks)] = blocks
+            tok_b[slot, 0] = first
+            if ptok_b is not None:
+                ptok_b[slot, 0] = int(req.prompt[-1])
+                for dst, is_neg in zip(draft_bufs, dneg):
+                    if is_neg:
+                        dst[slot] = -1
+            pos_b[slot, 0] = self.bucket
+            pcur_b[slot, 0] = pcur0
+            ptoks_b[slot, :] = req.prompt
+            self.slots[slot] = req
+            req.slot = slot
+            req.chunk_pos = pcur0
+            if pcur0 >= self.bucket:
+                req.board(slot, first)
+        for b in (tok_b, ptok_b, pos_b, pcur_b, ptoks_b):
+            if b is not None:
+                self.prog.invalidate(b)
+        self.prog.invalidate(self.table)
+        if wrote_pool:
+            # _reset_kpos only touches the position leaves.
+            for leaf, neg in zip(self._pool_leaves(), self._neg_leaves):
+                if neg:
+                    self.prog.invalidate(leaf)
+        for dst, is_neg in zip(draft_bufs, dneg):
+            if is_neg:
+                self.prog.invalidate(dst)
+        return {"joined": len(plans), "failed": [], "seconds": seconds}
+
+    def _chain_head(self, req) -> List[int]:
+        """Chain-cached leading full blocks of a chunking prompt, increfed.
+        Clamped so at least one prompt position is left to chunk — the
+        completing chunk's final prompt row is where ``ctok`` comes from.
+        Speculative slots always chunk from 0: the draft cache has no
+        cached prefix to skip with."""
+        if not self.prefix_enabled or self.spec_k:
+            return []
+        bl = self.block_len
+        key: tuple = ("root",)
+        lead: List[int] = []
+        for j in range((self.bucket - 1) // bl):
+            key = BlockPool.chain_key(key, req.prompt[j * bl:(j + 1) * bl])
+            hit = self.pool.lookup_chain(key)
+            if hit is None:
+                break
+            lead.append(hit)
+        if lead:
+            self.pool.incref(lead)
+            self.pool.counters["prefix_hits"] += 1
+            self.pool.counters["prefix_blocks_shared"] += len(lead)
+        return lead
+
+    def _on_chunk_complete(self, slot: int, req) -> None:
+        """Chunk-completed prompt: its leading blocks now hold exactly the
+        KV whole-prompt prefill would have produced (bit-identity), so they
+        enter the prefix caches — chain entries per full block, plus a
+        whole-prompt entry for block-aligned prompts (a partial tail block
+        keeps receiving this request's decode appends and must not be
+        shared)."""
+        if not self.prefix_enabled or self.spec_k:
+            return
+        bl, bucket, pool = self.block_len, self.bucket, self.pool
+        blocks = self.slot_blocks[slot]
+        n_full = bucket // bl
+        key: tuple = ("root",)
+        for j in range(n_full):
+            key = BlockPool.chain_key(key, req.prompt[j * bl:(j + 1) * bl])
+            if pool.lookup_chain(key) is None:
+                pool.register_chain(key, blocks[j])
+        if bucket % bl == 0:
+            pool.register_prompt(req.prompt.tobytes(), blocks[:n_full],
+                                 req.tokens[0])
+
     # ------------------------------------------------- pool mirror plumbing
     def _pool_leaves(self) -> list:
+        base = (4 if self.spec_k else 3) + (2 if self.chunk_len else 0)
         if self.spec_k:
-            return self.prog._ins[4:4 + self._n_pool]
-        return self.prog._ins[3:]
+            return self.prog._ins[base:base + self._n_pool]
+        return self.prog._ins[base:]
 
     def _store_block(self, block: int, row: list, j: int) -> None:
         """Copy logical block ``j`` of one prefill slot row into physical
@@ -678,9 +890,12 @@ class PagedBatchGroup(BatchGroup):
         res = super().harvest_segment()
         if "errors" not in res:
             # Under speculation each slot advanced seg_len + its accepted
-            # draft tokens — the net new valid positions in its blocks.
+            # draft tokens — the net new valid positions in its blocks;
+            # chunked segments additionally wrote each prefilling slot's
+            # chunk of prompt positions.
             self.pool.note_tokens(res["n_active"] * self.seg_len
-                                  + res.get("accepted", 0))
+                                  + res.get("accepted", 0)
+                                  + res.get("chunk_tokens", 0))
         return res
 
     def detach(self) -> None:
@@ -689,7 +904,8 @@ class PagedBatchGroup(BatchGroup):
         objects, so the state must track whichever arrays hold the latest
         written-back KV when the next group generation picks them up."""
         self.state.leaves = list(self._pool_leaves())
-        self.state.table = self.prog._ins[3 if self.spec_k else 2]
+        self.state.table = self.prog._ins[(3 if self.spec_k else 2)
+                                          + (2 if self.chunk_len else 0)]
 
     def fail_all(self, errors: Sequence[str]) -> List[object]:
         for slot in range(self.n_slots):

@@ -40,6 +40,7 @@ from repro.serve.batcher import (
     BatchGroup,
     Buckets,
     ModelKernels,
+    chunks_for,
     segments_for,
     spec_segments_for,
 )
@@ -141,7 +142,7 @@ class _Request:
     """Batcher-internal request state (single-threaded after submit)."""
 
     __slots__ = ("handle", "prompt", "bucket", "gen", "deadline", "seq",
-                 "tokens", "slot", "deferred")
+                 "tokens", "slot", "deferred", "chunk_pos")
 
     def __init__(self, handle: RequestHandle, prompt: np.ndarray, bucket: int,
                  gen: int, deadline: Optional[float], seq: int) -> None:
@@ -154,6 +155,9 @@ class _Request:
         self.tokens: List[int] = []
         self.slot: Optional[int] = None
         self.deferred = False  # counted once, not per boarding attempt
+        # Chunked prefill: host mirror of the slot's device cursor (None in
+        # whole-prompt mode; bucket = prompt fully written, decoding).
+        self.chunk_pos: Optional[int] = None
 
     def board(self, slot: int, first_token: int) -> None:
         self.slot = slot
@@ -199,6 +203,36 @@ def validate_draft(cfg, draft: DraftSpec) -> None:
                          "seq_shard_cache (mesh decode is single-row)")
 
 
+def validate_chunked(cfg, api, chunk_len: int) -> None:
+    """Fail fast on configurations chunked prefill cannot keep
+    bit-identical.  The chunk stage replays the prompt through the decode
+    cache path (scatter, then attend the cache *as stored*), so anything
+    that makes the stored prefix differ from what one-shot prefill would
+    have attended is a configuration error, not a runtime surprise."""
+    if chunk_len < 1:
+        raise ValueError(f"chunk_len must be >= 1: {chunk_len}")
+    if api.prefill_chunk is None:
+        raise ValueError(
+            f"family {cfg.family!r} has no chunked-prefill path: recurrent "
+            "state cannot replay a prompt in masked position chunks"
+        )
+    if cfg.window:
+        raise ValueError(
+            f"chunked prefill is incompatible with a rolling window "
+            f"({cfg.window}): chunk rows must attend the stored prompt "
+            "prefix, which the ring overwrites"
+        )
+    if cfg.cache_dtype:
+        raise ValueError(
+            "chunked prefill is incompatible with cache_dtype quantization: "
+            "later chunks would attend quantized keys where one-shot "
+            "prefill attends full-precision ones, breaking bit-identity"
+        )
+    if cfg.seq_shard_cache:
+        raise ValueError("chunked prefill is incompatible with "
+                         "seq_shard_cache (mesh decode is single-row)")
+
+
 class InferenceServer:
     """Accepts independent requests over time and serves them through
     continuously-batched prefill/decode-segment runs on the engine runtime.
@@ -238,7 +272,8 @@ class InferenceServer:
                  pad_id: int = 0,
                  kernels: Optional[ModelKernels] = None,
                  paged: Optional[PagedSpec] = None,
-                 draft: Optional[DraftSpec] = None) -> None:
+                 draft: Optional[DraftSpec] = None,
+                 chunk_len: int = 0) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
@@ -248,6 +283,9 @@ class InferenceServer:
         if draft is not None:
             validate_draft(cfg, draft)
         self.draft = draft
+        self.chunk_len = int(chunk_len)  # 0 = whole-prompt prefill Programs
+        if self.chunk_len:
+            validate_chunked(cfg, api, self.chunk_len)
         self.pool_admission = PoolAdmission()
         # Kernel objects may be shared across servers: DeviceGroups key their
         # jit cache on kernel identity, so a restarted server on warm groups
@@ -255,6 +293,9 @@ class InferenceServer:
         self.kernels = kernels or ModelKernels(cfg, api, params, draft=draft)
         if draft is not None and self.kernels.spec_k != draft.k:
             raise ValueError("kernels were built without this draft spec")
+        if self.chunk_len and draft is not None:
+            # The chunk stage advances the draft cache too.
+            validate_chunked(draft.cfg, self.kernels.dapi, self.chunk_len)
         self.buckets = Buckets(buckets)
         self.max_batch = int(max_batch)
         self.seg_len = int(seg_len)
@@ -263,6 +304,9 @@ class InferenceServer:
         self.admission = admission or DeadlineAdmission()
         self.pad_id = pad_id
         self._cv = threading.Condition()
+        self._poke = False  # wake-up latch: survives notifies that fire
+        # while the batcher itself holds the cv (e.g. a chunked join's
+        # already-done prefill handle calling back synchronously)
         self._pending: dict = {}        # bucket -> EDF-sorted [_Request]
         self._groups: dict = {}         # bucket -> BatchGroup
         self._seq = itertools.count()
@@ -322,7 +366,8 @@ class InferenceServer:
                 )
                 return handle
             if not self.admission.admit(now, deadline, bucket,
-                                        self._segments_left(max_new_tokens)):
+                                        self._segments_left(max_new_tokens),
+                                        n_chunks=self._n_chunks(bucket)):
                 self._stats["rejected"] += 1
                 handle._reject(
                     f"deadline {deadline_s * 1e3:.1f}ms below forecast for "
@@ -345,6 +390,8 @@ class InferenceServer:
                            if s["tokens_drafted"] else None)
         s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
         s["memory"] = mem
+        s["admission"] = self.admission.stats()
+        s["chunk_len"] = self.chunk_len
         return s
 
     @property
@@ -451,6 +498,7 @@ class InferenceServer:
     # ---------------------------------------------------------- event loop
     def _notify(self) -> None:
         with self._cv:
+            self._poke = True
             self._cv.notify_all()
 
     def _loop(self) -> None:
@@ -461,7 +509,16 @@ class InferenceServer:
                     if (self._closing and not self._pending_any()
                             and not self._groups):
                         return
+                    if self._poke:
+                        # A notify landed during _advance_all (the cv is
+                        # re-entrant, so a synchronously-completed handle's
+                        # callback fires while this thread holds it): the
+                        # notify_all was unseen by wait(), so loop again
+                        # instead of sleeping on a stale signal.
+                        self._poke = False
+                        continue
                     self._cv.wait(timeout=timer)
+                    self._poke = False
         except BaseException as exc:  # noqa: BLE001 — a dying batcher must
             self._crash(exc)  # resolve every handle, not strand clients
 
@@ -520,11 +577,12 @@ class InferenceServer:
                                           self.scheduler, bucket,
                                           self.max_batch, self.seg_len,
                                           self._max_seq(bucket), self.paged,
-                                          state)
+                                          state, chunk_len=self.chunk_len)
                 else:
                     grp = BatchGroup(self.kernels, self.runtime,
                                      self.scheduler, bucket, self.max_batch,
-                                     self.seg_len, self._max_seq(bucket))
+                                     self.seg_len, self._max_seq(bucket),
+                                     chunk_len=self.chunk_len)
                 self._groups[bucket] = grp
                 self._board(grp, now)
             else:
@@ -552,6 +610,12 @@ class InferenceServer:
         tps = self.admission.model.tokens_per_step(self.draft.k)
         return spec_segments_for(gen, self.seg_len, tps)
 
+    def _n_chunks(self, bucket: int) -> int:
+        """Mixed-phase segments a join at this bucket spends prefilling (0
+        in whole-prompt mode) — the admission forecast's TTFT unit under
+        chunked prefill."""
+        return chunks_for(bucket, self.chunk_len) if self.chunk_len else 0
+
     def _advance_group(self, grp: BatchGroup, now: float) -> None:
         if grp.seg_handle is not None and grp.seg_handle.done():
             res = grp.harvest_segment()
@@ -575,7 +639,9 @@ class InferenceServer:
         if (grp.seg_handle is None and grp.prefill_handle is not None
                 and grp.prefill_handle.done()):
             res = grp.merge_prefill()
-            self.admission.model.observe("prefill", grp.bucket, res["seconds"])
+            if not self.chunk_len:  # chunked joins run no prefill Program
+                self.admission.model.observe("prefill", grp.bucket,
+                                             res["seconds"])
             for req in res["failed"]:
                 self._stats["failed"] += 1
                 req.handle._fail(
@@ -617,7 +683,8 @@ class InferenceServer:
             # memory deferral would otherwise park it at the head of the EDF
             # queue and starve feasible requests queued behind it.
             if not self.admission.admit(now, q[0].deadline, grp.bucket,
-                                        self._segments_left(q[0].gen)):
+                                        self._segments_left(q[0].gen),
+                                        n_chunks=self._n_chunks(grp.bucket)):
                 req = q.pop(0)
                 self._stats["rejected"] += 1
                 req.handle._reject("deadline unreachable at boarding time")

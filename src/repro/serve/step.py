@@ -187,6 +187,38 @@ def make_decode_chain(cfg, api):
     return decode_chain
 
 
+def make_chunk_step(cfg, api, bucket: int, chunk_len: int):
+    """One mixed-phase prefill-chunk stage over the whole batch (chunked
+    prefill: the decode segment Program advances still-prefilling slots'
+    cursors by ``chunk_len`` prompt tokens while other slots decode).
+
+    ``chunk(params, cache, ptoks, pcur) -> (ctok, pcur', cache)`` where
+    ``ptoks`` is the (B, bucket) padded-prompt buffer, ``pcur`` the (B, 1)
+    prefill cursor (``pcur >= bucket`` ⇒ the slot is decoding: all its
+    rows arrive masked and its cache is untouched).  ``ctok`` is the argmax
+    of the logits at each slot's final prompt row — the slot's first
+    generated token, meaningful only for slots whose prefill completes this
+    chunk (``pcur < bucket <= pcur'``); bit-identical to whole-prompt
+    prefill's ``argmax(logits[:, -1])``.  Per-slot cursors stagger freely
+    (paged prefix-cache hits skip whole blocks), so chunk tokens are
+    gathered per slot with clipped ``take_along_axis``."""
+
+    def chunk(params, cache, ptoks, pcur):
+        params = cast_params_cached(params, cfg.compute_dtype)
+        base = pcur[:, 0]  # (B,)
+        positions = base[:, None] + jnp.arange(chunk_len, dtype=jnp.int32)
+        valid = positions < bucket
+        idx = jnp.clip(positions, 0, bucket - 1)
+        toks = jnp.take_along_axis(ptoks, idx, axis=1)  # (B, chunk_len)
+        last_idx = jnp.clip(bucket - 1 - base, 0, chunk_len - 1)
+        logits, cache = api.prefill_chunk(
+            params, toks, base, valid, cfg, cache, last_idx)
+        ctok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return ctok, jnp.minimum(pcur + chunk_len, bucket), cache
+
+    return chunk
+
+
 @dataclasses.dataclass(frozen=True)
 class DraftSpec:
     """Speculative-decoding draft model: a small config sharing the target's

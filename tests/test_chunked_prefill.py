@@ -1,0 +1,282 @@
+"""Chunked prefill inside decode segments: bit-identity to one-shot
+generate across layouts (contiguous / paged / pallas_interpret / draft),
+chunk lengths that straddle the paged block length, prefix-cache reuse
+under chunking, mid-stream join/exit, and the per-chunk EDF admission
+forecast."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import DeviceGroup, Static
+from repro.models import get_model
+from repro.models import params as P
+from repro.serve import (
+    DeadlineAdmission,
+    DraftSpec,
+    InferenceServer,
+    PagedSpec,
+    ServiceModel,
+    chunks_for,
+    make_generate,
+    validate_chunked,
+)
+
+PLEN, GEN = 8, 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("qwen1.5-4b"))
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def reference(model):
+    cfg, api, params = model
+    gen = make_generate(cfg, api)
+
+    def ref(prompt, n):
+        toks = gen(params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, n)
+        return np.asarray(toks)[0]
+
+    return ref
+
+
+def prompts_for(cfg, seed, n, plen=PLEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def serve_all(cfg, api, params, prompts, gen=GEN, **kw):
+    kw.setdefault("groups", [DeviceGroup("chunked")])
+    kw.setdefault("scheduler", Static())
+    kw.setdefault("buckets", (PLEN,))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("seg_len", 2)
+    kw.setdefault("max_new_cap", 10)
+    kw.setdefault("max_wait_ms", 5.0)
+    with InferenceServer(cfg, api, params, **kw) as srv:
+        handles = [srv.submit(p, gen) for p in prompts]
+        results = [h.result(timeout=300) for h in handles]
+        stats = srv.stats()
+    return results, stats
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("chunk_len", [3, 8])
+def test_contiguous_chunked_bit_identical(model, reference, chunk_len):
+    """Chunked == whole == one-shot, including a chunk_len that does not
+    divide the bucket (last chunk ragged) and one that covers the whole
+    prompt in a single segment."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 21, 6)
+    got, stats = serve_all(cfg, api, params, prompts, chunk_len=chunk_len)
+    for p, r in zip(prompts, got):
+        np.testing.assert_array_equal(r, reference(p, GEN))
+    assert stats["completed"] == 6
+    assert stats["chunk_len"] == chunk_len
+
+
+def test_paged_chunked_straddles_block_len(model, reference):
+    """chunk_len=3 against block_len=4: chunk boundaries land mid-block and
+    across block seams; the paged write path must still produce the exact
+    one-shot streams."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 22, 6)
+    got, stats = serve_all(cfg, api, params, prompts, chunk_len=3,
+                           paged=PagedSpec(block_len=4))
+    for p, r in zip(prompts, got):
+        np.testing.assert_array_equal(r, reference(p, GEN))
+    assert stats["completed"] == 6
+    assert stats["memory"]["mode"] == "paged"
+
+
+def test_pallas_interpret_chunked_bit_identical(reference):
+    """The Pallas chunk-attention path (flash_decode over the stored
+    cache), interpreted on CPU, matches the reference row-for-row."""
+    cfg = reduced(get_config("qwen1.5-4b"))
+    cfg = dataclasses.replace(cfg, kernel_impl="pallas_interpret")
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                           jnp.float32)
+    prompts = prompts_for(cfg, 23, 2)
+    got, _ = serve_all(cfg, api, params, prompts, gen=4, chunk_len=3)
+    for p, r in zip(prompts, got):
+        np.testing.assert_array_equal(r, reference(p, 4))
+
+
+def test_draft_chunked_bit_identical(model, reference):
+    """Speculative decoding on top of chunked prefill: the chunk stage must
+    advance the draft cache too, and outputs stay bit-identical."""
+    cfg, api, params = model
+    dparams = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(9),
+                            jnp.float32)
+    prompts = prompts_for(cfg, 24, 4)
+    got, stats = serve_all(cfg, api, params, prompts, chunk_len=2,
+                           draft=DraftSpec(cfg, dparams, k=2))
+    for p, r in zip(prompts, got):
+        np.testing.assert_array_equal(r, reference(p, GEN))
+    assert stats["tokens_drafted"] > 0
+
+
+def test_paged_draft_chunked_bit_identical(model, reference):
+    cfg, api, params = model
+    dparams = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(9),
+                            jnp.float32)
+    prompts = prompts_for(cfg, 25, 4)
+    got, _ = serve_all(cfg, api, params, prompts, chunk_len=3,
+                       paged=PagedSpec(block_len=4),
+                       draft=DraftSpec(cfg, dparams, k=2))
+    for p, r in zip(prompts, got):
+        np.testing.assert_array_equal(r, reference(p, GEN))
+
+
+# ------------------------------------------------------------ prefix reuse
+def test_paged_chunked_whole_prompt_cache_hit(model, reference):
+    """A prompt served once registers its blocks; resubmitting it must skip
+    the chunk stage entirely (whole-prompt hit boards decoding at merge)
+    and still emit the identical stream."""
+    cfg, api, params = model
+    prompt = prompts_for(cfg, 26, 1)[0]
+    want = reference(prompt, GEN)
+    with InferenceServer(cfg, api, params, groups=[DeviceGroup("hit")],
+                         scheduler=Static(), buckets=(PLEN,), max_batch=4,
+                         seg_len=2, max_new_cap=10, max_wait_ms=5.0,
+                         chunk_len=3, paged=PagedSpec(block_len=4)) as srv:
+        first = srv.submit(prompt, GEN).result(timeout=300)
+        second = srv.submit(prompt, GEN).result(timeout=300)
+        stats = srv.stats()
+    np.testing.assert_array_equal(first, want)
+    np.testing.assert_array_equal(second, want)
+    assert stats["memory"]["prefix_hits"] >= 1, stats["memory"]
+
+
+def test_paged_chunked_chain_head_start(model, reference):
+    """A prompt sharing only its leading block with a served one gets a
+    chunk-cursor head start from the chain cache (prefill resumes
+    mid-prompt) — and the output still matches one-shot generate."""
+    cfg, api, params = model
+    a = prompts_for(cfg, 27, 1)[0]
+    b = a.copy()
+    b[4:] = (b[4:] + 1) % cfg.vocab  # same first block (block_len=4), new tail
+    with InferenceServer(cfg, api, params, groups=[DeviceGroup("chain")],
+                         scheduler=Static(), buckets=(PLEN,), max_batch=4,
+                         seg_len=2, max_new_cap=10, max_wait_ms=5.0,
+                         chunk_len=3, paged=PagedSpec(block_len=4)) as srv:
+        got_a = srv.submit(a, GEN).result(timeout=300)
+        got_b = srv.submit(b, GEN).result(timeout=300)
+        stats = srv.stats()
+    np.testing.assert_array_equal(got_a, reference(a, GEN))
+    np.testing.assert_array_equal(got_b, reference(b, GEN))
+    assert stats["memory"]["prefix_hits"] >= 1, stats["memory"]
+
+
+# ------------------------------------------------------- mid-stream dynamics
+def test_midstream_join_and_exit_chunked(model, reference):
+    """Requests with staggered lengths join while earlier ones are decoding
+    and exit at different segments; every stream stays bit-identical and at
+    least one join happens mid-stream (after segments already ran)."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 28, 6)
+    gens = [6, 4, 5, 6, 4, 5]
+    with InferenceServer(cfg, api, params, groups=[DeviceGroup("join")],
+                         scheduler=Static(), buckets=(PLEN,), max_batch=3,
+                         seg_len=2, max_new_cap=10, max_wait_ms=2.0,
+                         chunk_len=3) as srv:
+        handles = []
+        for i, (p, n) in enumerate(zip(prompts, gens)):
+            handles.append(srv.submit(p, n))
+            time.sleep(0.05 if i == 2 else 0.0)  # force a later second wave
+        results = [h.result(timeout=300) for h in handles]
+        stats = srv.stats()
+    for p, n, r in zip(prompts, gens, results):
+        np.testing.assert_array_equal(r, reference(p, n))
+    assert stats["completed"] == 6
+    assert stats["midstream_joins"] >= 1, stats
+
+
+# ----------------------------------------------------------- admission math
+def test_ttft_forecast_per_chunk():
+    """Chunked TTFT forecast = n_chunks × the segment-rate EMA (no prefill
+    term); whole-prompt forecast stays the prefill EMA."""
+    adm = DeadlineAdmission()
+    assert adm.ttft_forecast(PLEN) is None  # cold
+    assert adm.ttft_forecast(PLEN, n_chunks=3) is None
+    adm.model.observe("segment", PLEN, 0.010)
+    adm.model.observe("prefill", PLEN, 0.200)
+    assert adm.ttft_forecast(PLEN) == pytest.approx(0.200)
+    assert adm.ttft_forecast(PLEN, n_chunks=3) == pytest.approx(0.030)
+    assert adm.ttft_forecast(PLEN, n_chunks=1) == pytest.approx(0.010)
+
+
+def test_admit_counts_chunks_as_segments():
+    """admit(n_chunks=k) forecasts completion as (segments_left + k)
+    segments and never adds the prefill EMA — the prompt advances inside
+    the decode segments."""
+    adm = DeadlineAdmission()
+    adm.model.observe("segment", PLEN, 0.010)
+    adm.model.observe("prefill", PLEN, 10.0)  # would doom any deadline
+    now = 100.0
+    # 5 decode segments + 3 chunk segments = 0.08s: fits an 0.1s budget
+    # (the 10s prefill EMA must NOT be charged), misses a 0.05s one.
+    assert adm.admit(now, now + 0.1, PLEN, 5, n_chunks=3)
+    assert not adm.admit(now, now + 0.05, PLEN, 5, n_chunks=3)
+    # Whole-prompt accounting still charges the prefill term.
+    assert not adm.admit(now, now + 0.1, PLEN, 5)
+
+
+def test_admission_stats_surface():
+    """Every decision is recorded with its TTFT forecast and chunk count,
+    and stats() summarizes admitted/rejected + the mean forecast."""
+    adm = DeadlineAdmission()
+    adm.model.observe("segment", PLEN, 0.010)
+    now = 50.0
+    assert adm.admit(now, None, PLEN, 4, n_chunks=2)
+    assert not adm.admit(now, now + 0.01, PLEN, 4, n_chunks=2)
+    s = adm.stats()
+    assert s["admitted"] == 1 and s["rejected"] == 1
+    assert len(s["decisions"]) == 2
+    for d in s["decisions"]:
+        assert d["bucket"] == PLEN and d["n_chunks"] == 2
+        assert d["ttft_forecast_s"] == pytest.approx(0.020)
+    assert s["ttft_forecast_mean_s"] == pytest.approx(0.020)
+
+
+def test_chunks_for():
+    assert chunks_for(8, 8) == 1
+    assert chunks_for(8, 3) == 3
+    assert chunks_for(8, 2) == 4
+    assert chunks_for(16, 3) == 6
+    assert chunks_for(1, 4) == 1
+
+
+def test_validate_chunked_rejections(model):
+    cfg, api, _ = model
+    with pytest.raises(ValueError, match="chunk_len"):
+        validate_chunked(cfg, api, 0)
+    windowed = dataclasses.replace(cfg, window=4)
+    with pytest.raises(ValueError, match="window"):
+        validate_chunked(windowed, api, 2)
+    no_chunk_api = api._replace(prefill_chunk=None)
+    with pytest.raises(ValueError, match="family"):
+        validate_chunked(cfg, no_chunk_api, 2)
+
+
+def test_service_model_segment_ema_feeds_chunked_forecast():
+    """The forecast tracks the smoothed segment rate, not the last sample:
+    EMA(alpha=0.4) after 0.010 then 0.020 is 0.014."""
+    m = ServiceModel(alpha=0.4)
+    m.observe("segment", PLEN, 0.010)
+    m.observe("segment", PLEN, 0.020)
+    adm = DeadlineAdmission(m)
+    assert adm.ttft_forecast(PLEN, n_chunks=2) == pytest.approx(0.028)
