@@ -2,6 +2,10 @@
 
 Reads experiments/dryrun/<arch>__<shape>__pod16x16[__tag].json and prints
 markdown rows: terms before/after + deltas per iteration tag.
+
+``--trace FILE`` instead summarizes a Chrome trace-event JSON (as written
+by ``--trace-out`` anywhere in the stack): wall-clock per span phase —
+where a serving run's time actually went.
 """
 from __future__ import annotations
 
@@ -44,10 +48,31 @@ def row(label: str, r: dict, base: dict | None = None) -> str:
     return f"| {label} | {cells[0]} | {cells[1]} | {cells[2]} | {dom} | {frac:.4f} |"
 
 
+def trace_report(path: str) -> None:
+    """Markdown span-phase summary of a Chrome trace-event JSON."""
+    from repro.core.trace import phase_totals
+
+    doc = json.loads(Path(path).read_text())
+    totals = phase_totals(doc.get("traceEvents", []))
+    print(f"### span phases — {path}\n")
+    print("| phase | spans | total (ms) | mean (µs) |")
+    print("|---|---|---|---|")
+    for name, d in sorted(totals.items(), key=lambda kv: -kv[1]["seconds"]):
+        mean_us = d["seconds"] / d["count"] * 1e6 if d["count"] else 0.0
+        print(f"| {name} | {d['count']} | {d['seconds'] * 1e3:.2f} "
+              f"| {mean_us:.1f} |")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--trace", default="",
+                    help="summarize a Chrome trace-event JSON instead of "
+                         "the dry-run roofline cells")
     args = ap.parse_args()
+    if args.trace:
+        trace_report(args.trace)
+        return
     d = Path(args.dir)
     for (arch, shape), tags in CELLS.items():
         base = load(d, arch, shape)

@@ -238,6 +238,11 @@ def serve_bench(rows: list[str], full: bool,
         # memory scales with recorded depth, not slot capacity).
         rows.append(f"serve_kv_alloc_ratio,{pv['paged_kv_bytes_allocated']},"
                     f"{pv['allocated_ratio']:.3f}")
+    to = out.get("tracing_overhead")
+    if to:
+        # derived = tokens/s cost of leaving span tracing on (the <3%
+        # observability contract; CI asserts it from the JSON report).
+        rows.append(f"serve_tracing_overhead,0,{to['overhead_pct']:.2f}")
     cw = out.get("chunked_vs_whole")
     if cw:
         # derived = whole/chunked p99 TTFT at the top mixed-prompt rate

@@ -3,6 +3,12 @@
 Dumps the introspector's package stream as CSV per (benchmark, scheduler):
 device, offset, size, t_start, duration — the data behind the paper's
 package-distribution plots.
+
+``--trace-out FILE`` additionally records the same runs (plus a small
+serving replay) through the span tracer and writes one Chrome trace-event
+JSON — the Perfetto-loadable superset of these CSVs: every package is an
+``execute`` span on its device-group track, with the batcher / request
+lifecycle spans alongside.
 """
 from __future__ import annotations
 
@@ -10,6 +16,7 @@ import argparse
 from pathlib import Path
 
 from repro.core import EngineCL
+from repro.core.trace import Tracer, phase_totals, set_tracer, tracer
 
 from benchmarks.coexec import SCHEDULERS, SIZES, build_program, make_groups, POWERS
 
@@ -31,11 +38,43 @@ def trace(name: str, sched_name: str, target_seconds: float = 1.0) -> list[str]:
     return lines
 
 
+def _serve_replay() -> None:
+    """A small continuous-batching replay so the Chrome trace carries the
+    full serving span taxonomy (request/admission/segment/...) next to the
+    co-exec packages."""
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    from repro.models.params import materialize
+    from repro.serve import InferenceServer
+
+    cfg = reduced(get_config("qwen1.5-4b"))
+    api = get_model(cfg)
+    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                         jnp.float32)
+    rng = np.random.default_rng(0)
+    with InferenceServer(cfg, api, params, buckets=(8,), max_batch=4,
+                         seg_len=2, max_new_cap=4) as srv:
+        handles = [srv.submit(rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                              4) for _ in range(6)]
+        for h in handles:
+            h.result(timeout=600)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/traces")
     ap.add_argument("--benchmarks", nargs="*", default=["gaussian", "mandelbrot"])
+    ap.add_argument("--trace-out", default="",
+                    help="also write a Chrome trace-event JSON (Perfetto) "
+                         "of the co-exec runs plus a small serving replay")
     args = ap.parse_args()
+    if args.trace_out:
+        set_tracer(Tracer(capacity=1 << 17, enabled=True))
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     for name in args.benchmarks:
@@ -44,6 +83,14 @@ def main() -> None:
             f = out / f"{name}__{sched}.csv"
             f.write_text("\n".join(lines))
             print(f"{f}: {len(lines) - 1} packages")
+    if args.trace_out:
+        _serve_replay()
+        doc = tracer().write(args.trace_out)
+        set_tracer(Tracer(enabled=False))
+        print(f"{args.trace_out}: {len(doc['traceEvents'])} events")
+        for name, d in sorted(phase_totals(doc["traceEvents"]).items(),
+                              key=lambda kv: -kv[1]["seconds"]):
+            print(f"  {name}: {d['count']} spans, {d['seconds'] * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@ from repro.core.runtime import (  # noqa: F401
     Runtime,
 )
 from repro.core.rating import ThroughputRater  # noqa: F401
+from repro.core.trace import (  # noqa: F401
+    Tracer,
+    phase_totals,
+    set_tracer,
+    tracer,
+    validate_chrome,
+)
 from repro.core.scheduler.base import Scheduler  # noqa: F401
 from repro.core.scheduler.dynamic import Dynamic  # noqa: F401
 from repro.core.scheduler.hguided import HGuided  # noqa: F401

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -31,12 +31,20 @@ class PackageRecord:
 
 
 class Introspector:
-    def __init__(self) -> None:
+    """Per-run package recorder.  ``sink`` (optional) is a streaming
+    channel: every record is forwarded to it right after being stored —
+    the runtime points it at the span tracer so per-package execute spans
+    appear in traces without a second measurement path.  All readers
+    snapshot ``records`` under ``_lock``: workers append concurrently."""
+
+    def __init__(self, sink: Optional[Callable[[PackageRecord], None]]
+                 = None) -> None:
         self._lock = threading.Lock()
         self.records: List[PackageRecord] = []
         self.t_run_start: float = 0.0
         self.t_run_end: float = 0.0
         self.counters: Dict[str, dict] = {}  # device -> transfer counters
+        self._sink = sink
 
     def start_run(self) -> None:
         with self._lock:
@@ -45,11 +53,17 @@ class Introspector:
             self.t_run_start = time.perf_counter()
 
     def end_run(self) -> None:
-        self.t_run_end = time.perf_counter()
+        with self._lock:
+            self.t_run_end = time.perf_counter()
 
     def record(self, rec: PackageRecord) -> None:
         with self._lock:
             self.records.append(rec)
+        if self._sink is not None:
+            try:
+                self._sink(rec)
+            except Exception:  # noqa: BLE001 — observability must never
+                pass  # fail the run it observes
 
     def record_counters(self, device: str, transfers: int,
                         cache_hits: int) -> None:
@@ -68,11 +82,14 @@ class Introspector:
     # ------------------------------------------------------------ metrics
     @property
     def response_time(self) -> float:
-        return self.t_run_end - self.t_run_start
+        with self._lock:
+            return self.t_run_end - self.t_run_start
 
-    def per_device(self) -> Dict[str, dict]:
+    @staticmethod
+    def _per_device(records: List[PackageRecord],
+                    t_run_start: float) -> Dict[str, dict]:
         out: Dict[str, dict] = {}
-        for r in self.records:
+        for r in records:
             d = out.setdefault(
                 r.device,
                 {"packages": 0, "work_items": 0, "busy": 0.0, "finish": 0.0, "chunks": []},
@@ -80,34 +97,53 @@ class Introspector:
             d["packages"] += 1
             d["work_items"] += r.size_wi
             d["busy"] += r.seconds
-            d["finish"] = max(d["finish"], r.t_end - self.t_run_start)
-            d["chunks"].append((r.offset_wi, r.size_wi, r.t_start - self.t_run_start, r.seconds))
+            d["finish"] = max(d["finish"], r.t_end - t_run_start)
+            d["chunks"].append((r.offset_wi, r.size_wi, r.t_start - t_run_start, r.seconds))
         return out
 
-    def balance(self) -> float:
-        per = self.per_device()
+    def per_device(self) -> Dict[str, dict]:
+        with self._lock:
+            records = list(self.records)
+            t0 = self.t_run_start
+        return self._per_device(records, t0)
+
+    @staticmethod
+    def _balance(per: Dict[str, dict]) -> float:
         if len(per) < 2:
             return 1.0
         finishes = [d["finish"] for d in per.values()]
         return min(finishes) / max(finishes) if max(finishes) > 0 else 1.0
 
-    def work_share(self) -> Dict[str, float]:
-        per = self.per_device()
+    @staticmethod
+    def _work_share(per: Dict[str, dict]) -> Dict[str, float]:
         tot = sum(d["work_items"] for d in per.values()) or 1
         return {k: d["work_items"] / tot for k, d in per.items()}
 
+    def balance(self) -> float:
+        return self._balance(self.per_device())
+
+    def work_share(self) -> Dict[str, float]:
+        return self._work_share(self.per_device())
+
     def summary(self) -> dict:
+        # One consistent snapshot: records, run window, and counters are
+        # read under the lock together, then every derived metric is
+        # computed from that snapshot (a worker appending mid-summary can
+        # not skew balance against n_packages).
         with self._lock:
+            records = list(self.records)
+            t0, t1 = self.t_run_start, self.t_run_end
             counters = {k: dict(v) for k, v in self.counters.items()}
+        per = self._per_device(records, t0)
         return {
-            "response_time": self.response_time,
-            "balance": self.balance(),
-            "work_share": self.work_share(),
+            "response_time": t1 - t0,
+            "balance": self._balance(per),
+            "work_share": self._work_share(per),
             "per_device": {
                 k: {kk: vv for kk, vv in v.items() if kk != "chunks"}
-                for k, v in self.per_device().items()
+                for k, v in per.items()
             },
-            "n_packages": len(self.records),
+            "n_packages": len(records),
             "transfers": counters,
         }
 

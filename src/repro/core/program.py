@@ -109,6 +109,12 @@ class Program:
         self._kernel_name = name
         return self
 
+    @property
+    def label(self) -> str:
+        """Human-readable kernel name — what traces and jit-cache keys call
+        this Program's work (e.g. ``decode_seg4``, ``prefill_32``)."""
+        return self._kernel_name
+
     # -- dataflow links ---------------------------------------------------
     def reads_from(self, *producers: "Program") -> "Program":
         """Declare upstream producers (the paper's linked buffers, §10).

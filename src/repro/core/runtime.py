@@ -42,6 +42,18 @@ from repro.core.device import DeviceGroup
 from repro.core.introspector import Introspector, PackageRecord
 from repro.core.program import Program, buffer_version, bump_version
 from repro.core.scheduler.base import Scheduler
+from repro.core.trace import tracer
+
+
+def _trace_execute(rec: PackageRecord) -> None:
+    """Introspector streaming sink → span tracer: every package record
+    becomes a complete "execute" span on its device group's track (the
+    record's perf_counter timestamps are already in the tracer's clock)."""
+    tr = tracer()
+    if tr.enabled:
+        tr.complete("execute", rec.t_enqueue, rec.t_end,
+                    track=f"group/{rec.device}",
+                    offset=rec.offset_wi, size=rec.size_wi)
 
 
 class RunError(RuntimeError):
@@ -371,7 +383,12 @@ class Runtime:
                 elif id(h.program) in linked or conflicts(reads, writes, h):
                     deps.append(h)
             handle = RunHandle(program, scheduler.clone(), len(self.groups),
+                               introspector=Introspector(sink=_trace_execute),
                                deps=deps, epilogue=epilogue)
+            tr = tracer()
+            if tr.enabled:
+                tr.instant("submit", track="runtime", kernel=program.label,
+                           deps=len(deps))
             errs = program.validate()
             if errs:
                 handle._fail(errs)
@@ -406,7 +423,16 @@ class Runtime:
         """Paper's Device thread body: pull → enqueue (async) → complete →
         write, against this run's scheduler/introspector/error list."""
         prog, sched = handle.program, handle.scheduler
-        if not self._await_deps(handle):
+        tr = tracer()
+        track = f"group/{group.name}"
+        dep_span = tr.enabled and bool(handle.deps)
+        if dep_span:
+            tr.begin("dep_wait", track=track, kernel=prog.label,
+                     deps=len(handle.deps))
+        ok = self._await_deps(handle)
+        if dep_span:
+            tr.end("dep_wait", track=track)
+        if not ok:
             return
         handle._mark_started()
         handle._ensure_prepared(self.groups)
@@ -422,6 +448,12 @@ class Runtime:
                     off, size = pkg
                     t_enq = time.perf_counter()
                     res = group.execute_chunk(prog, off, size)  # async dispatch
+                    if tr.enabled:
+                        # Host-side dispatch cost only: the device compute is
+                        # still in flight — it becomes the "execute" span.
+                        tr.complete("dispatch", t_enq, time.perf_counter(),
+                                    track=track, kernel=prog.label,
+                                    offset=off, size=size)
                     pending.append((off, size, res, t_enq))
                 if pkg is None and not pending:
                     break
@@ -440,6 +472,9 @@ class Runtime:
                     # adaptive raters (HGuided/ThroughputRater) observe.
                     service = t_end - t_enq
                     self._write_back(group, handle, off, size, res)
+                    if tr.enabled:
+                        tr.complete("write_back", t_end, time.perf_counter(),
+                                    track=track, offset=off, size=size)
                     handle.introspector.record(
                         PackageRecord(group.name, off, size, t_enq, t_enq, t_end)
                     )
@@ -451,10 +486,12 @@ class Runtime:
             # and must not kill the resident worker thread.
             handle.record_error(f"{group.name}: {traceback.format_exc()}")
         finally:
-            handle.introspector.record_counters(
-                group.name, group.n_transfers - xfer0,
-                group.n_cache_hits - hits0,
-            )
+            dx = group.n_transfers - xfer0
+            dh = group.n_cache_hits - hits0
+            handle.introspector.record_counters(group.name, dx, dh)
+            if tr.enabled and (dx or dh):
+                tr.instant("transfers", track=track, kernel=prog.label,
+                           transfers=dx, cache_hits=dh)
 
     def _write_back(self, group: DeviceGroup, handle: RunHandle,
                     off: int, size: int, res) -> None:

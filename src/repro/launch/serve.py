@@ -19,6 +19,7 @@ plain and co-executed variants previously re-implemented prefill+chain with
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -28,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core import DeviceGroup, Dynamic, EngineCL, HGuided, Program, Static
+from repro.core.trace import Tracer, set_tracer, tracer
 from repro.launch.specs import make_batch
 from repro.models import get_model
 from repro.models.params import materialize
@@ -108,6 +110,23 @@ def _make_draft(cfg, params, args):
     return DraftSpec(dcfg, dparams, k=args.draft_k)
 
 
+def _metrics_pump(server, stop: threading.Event, every: float) -> None:
+    """Periodic rolling-telemetry print (``--metrics-every``): completed /
+    rejected counts plus windowed TTFT and inter-token-latency quantiles."""
+    def ms(v):
+        return "-" if v is None else f"{v * 1e3:.1f}ms"
+
+    while not stop.wait(every):
+        tel = server.telemetry
+        print(f"[metrics] completed={int(tel.counter('requests_completed'))} "
+              f"rejected={int(tel.counter('requests_rejected'))} "
+              f"ttft_p50={ms(tel.quantile('ttft_s', 0.5))} "
+              f"ttft_p99={ms(tel.quantile('ttft_s', 0.99))} "
+              f"itl_p50={ms(tel.quantile('itl_s', 0.5))} "
+              f"queue_p50={ms(tel.quantile('queue_wait_s', 0.5))}",
+              flush=True)
+
+
 def run_server(cfg, api, params, args) -> None:
     """Replay a seeded Poisson arrival trace through ``InferenceServer``."""
     from repro.serve import PagedSpec
@@ -133,6 +152,13 @@ def run_server(cfg, api, params, args) -> None:
         chunk_len=args.chunk_len,
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    stop = threading.Event()
+    pump = None
+    if args.metrics_every > 0:
+        pump = threading.Thread(
+            target=_metrics_pump, args=(server, stop, args.metrics_every),
+            name="metrics-pump", daemon=True)
+        pump.start()
     t0 = time.perf_counter()
     with server:
         handles = []
@@ -147,6 +173,10 @@ def run_server(cfg, api, params, args) -> None:
             h.wait(timeout=600)
             results.append(None if h.rejected else h.result(timeout=600))
     wall = time.perf_counter() - t0
+    if pump is not None:
+        stop.set()
+        pump.join(timeout=5)
+        print(server.prometheus(), end="")
     lat = sorted(h.metrics["latency"] for h in handles if not h.rejected)
     s = server.stats()
     pct = (f"p50={lat[len(lat) // 2] * 1e3:.0f}ms "
@@ -154,7 +184,7 @@ def run_server(cfg, api, params, args) -> None:
     print(
         f"served {s['completed']}/{args.requests} requests in {wall:.2f}s "
         f"(rate {args.rate}/s, {s['rejected']} rejected) "
-        f"{pct}occupancy={s['mean_occupancy']:.2f} "
+        f"{pct}occupancy={s['occupancy_mean']:.2f} "
         f"tokens/s={s['tokens_out'] / wall:.1f}"
     )
     if s["tokens_drafted"]:
@@ -226,6 +256,14 @@ def main() -> None:
                     help="draft tokens proposed per verify step")
     ap.add_argument("--verify", action="store_true",
                     help="assert outputs bit-identical to one-shot generate")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing); covers "
+                         "every mode — server, co-exec, one-shot")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="server mode: print rolling telemetry (completed, "
+                         "TTFT/ITL quantiles) every N seconds, plus the "
+                         "Prometheus exposition at exit (0 = off)")
     ap.add_argument("--kernel", default="",
                     choices=["", "reference", "pallas", "pallas_interpret"],
                     help="override cfg.kernel_impl (pallas_interpret runs "
@@ -252,24 +290,31 @@ def main() -> None:
     params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(args.seed),
                          jnp.float32)
 
-    if args.server:
-        run_server(cfg, api, params, args)
-        return
-
-    cell = ShapeCell("serve", args.prompt_len, args.requests, "prefill")
-    batch = make_batch(cfg, cell, jax.random.PRNGKey(args.seed + 1))
-    t0 = time.time()
-    if not args.coexec:
-        toks = run_oneshot(cfg, api, params, batch, args.gen)
-        print(f"generated {toks.shape} in {time.time() - t0:.2f}s")
-        print(np.asarray(toks[: min(4, args.requests)]))
-        return
-    out = run_coexec(cfg, api, params, batch, args)
-    print(out[: min(4, args.requests)])
-    if args.verify:
-        want = np.asarray(run_oneshot(cfg, api, params, batch, args.gen))
-        assert np.array_equal(out, want), "co-exec != one-shot generate"
-        print("verify: co-exec output bit-identical to one-shot generate")
+    if args.trace_out:
+        set_tracer(Tracer(capacity=1 << 17, enabled=True))
+    try:
+        if args.server:
+            run_server(cfg, api, params, args)
+            return
+        cell = ShapeCell("serve", args.prompt_len, args.requests, "prefill")
+        batch = make_batch(cfg, cell, jax.random.PRNGKey(args.seed + 1))
+        t0 = time.time()
+        if not args.coexec:
+            toks = run_oneshot(cfg, api, params, batch, args.gen)
+            print(f"generated {toks.shape} in {time.time() - t0:.2f}s")
+            print(np.asarray(toks[: min(4, args.requests)]))
+            return
+        out = run_coexec(cfg, api, params, batch, args)
+        print(out[: min(4, args.requests)])
+        if args.verify:
+            want = np.asarray(run_oneshot(cfg, api, params, batch, args.gen))
+            assert np.array_equal(out, want), "co-exec != one-shot generate"
+            print("verify: co-exec output bit-identical to one-shot generate")
+    finally:
+        if args.trace_out:
+            doc = tracer().write(args.trace_out)
+            print(f"trace: {len(doc['traceEvents'])} events -> "
+                  f"{args.trace_out}")
 
 
 if __name__ == "__main__":

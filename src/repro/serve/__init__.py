@@ -26,6 +26,12 @@ from repro.serve.server import (  # noqa: F401
     validate_chunked,
     validate_draft,
 )
+from repro.serve.telemetry import (  # noqa: F401
+    Ema,
+    RollingStat,
+    Telemetry,
+    quantile,
+)
 from repro.serve.step import (  # noqa: F401
     DraftSpec,
     cache_batch_axes,

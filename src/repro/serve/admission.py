@@ -100,6 +100,10 @@ class DeadlineAdmission:
         self.slack = slack
         self._dlock = threading.Lock()
         self._decisions: deque = deque(maxlen=record_cap)
+        # Streaming telemetry registry (serve.telemetry.Telemetry); the
+        # owning InferenceServer points this at its own registry so every
+        # decision counts and every TTFT forecast lands in a rolling stream.
+        self.telemetry = None
 
     # -- forecast ---------------------------------------------------------
     def forecast(self, bucket: int, segments_left: int,
@@ -146,13 +150,19 @@ class DeadlineAdmission:
                                 include_prefill=include_prefill)
             if est is not None:
                 ok = now + est * self.slack <= deadline
+        fc = self.ttft_forecast(bucket, n_chunks)
         with self._dlock:
             self._decisions.append({
                 "bucket": bucket,
                 "n_chunks": n_chunks,
-                "ttft_forecast_s": self.ttft_forecast(bucket, n_chunks),
+                "ttft_forecast_s": fc,
                 "admitted": ok,
             })
+        tel = self.telemetry
+        if tel is not None:
+            tel.count("admission_admitted" if ok else "admission_rejected")
+            if fc is not None:
+                tel.observe("ttft_forecast_s", fc)
         return ok
 
     def stats(self) -> dict:

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.program import Program
+from repro.core.trace import tracer
 from repro.serve.step import (
     DraftSpec,
     cache_batch_axes,
@@ -721,15 +722,18 @@ class BatchGroup:
         self.dead = False
         self.tokens_written = 0  # KV positions actually written (memory_stats)
         self.last_run_metrics: dict = {}
+        self.telemetry = None  # set by the owning InferenceServer
         self._build_segment_program()
         self.seg_handle = None
         self.prev_handle = None
         self._seg_t0 = 0.0
+        self._seg_tr0 = 0.0  # tracer-clock start (0 = not traced)
         # -- in-flight prefill wave ----------------------------------------
         self.prefill_handle = None
         self.prefill_wave: List[object] = []
         self._prefill_prog: Optional[Program] = None
         self._prefill_t0 = 0.0
+        self._prefill_tr0 = 0.0  # tracer-clock start (0 = not traced)
 
     def _build_segment_program(self) -> None:
         """Contiguous layout: slot-leading mirrors, ping-pong in/out pairs
@@ -905,6 +909,8 @@ class BatchGroup:
         assert len(requests) <= len(self.free_slots())
         self.prefill_wave = list(requests)
         self._prefill_t0 = _now()
+        tr = tracer()
+        self._prefill_tr0 = tr.now() if tr.enabled else 0.0
         if self.chunk_len:
             # Chunked mode: there is no prefill Program — joining slots are
             # armed host-side (merge) and the segment kernel's chunk stage
@@ -961,6 +967,15 @@ class BatchGroup:
         assert h is not None and h.done()
         self.prefill_handle, self.prefill_wave, self._prefill_prog = None, [], None
         seconds = h.metrics.get("response_time") or (_now() - self._prefill_t0)
+        tr = tracer()
+        if tr.enabled and self._prefill_tr0:
+            # The prefill Program's window on the batcher track (measured by
+            # the run's own introspector; merge happens at the boundary, so
+            # "now" would overstate it).
+            tr.complete("prefill_wave", self._prefill_tr0,
+                        self._prefill_tr0 + seconds, track="batcher",
+                        bucket=self.bucket, wave=len(wave))
+            self._prefill_tr0 = 0.0
         if h.has_errors():
             return {"joined": 0, "failed": list(wave), "errors": h.errors(),
                     "seconds": seconds}
@@ -988,6 +1003,8 @@ class BatchGroup:
                 dst[slot] = src[i]
             self.slots[slot] = req
             req.board(slot, int(tok0[i, 0]))
+            if tr.enabled:
+                tr.async_instant("first_token", req.seq, slot=slot)
         self.tokens_written += len(wave) * min(self.bucket, self.max_seq)
         for b in self.prog._ins:
             self.prog.invalidate(b)
@@ -1050,6 +1067,8 @@ class BatchGroup:
 
         after = [self.prev_handle] if self.prev_handle is not None else None
         self._seg_t0 = _now()
+        tr = tracer()
+        self._seg_tr0 = tr.now() if tr.enabled else 0.0
         h = self.runtime.submit(self.prog, self.scheduler,
                                 after=after, epilogue=epilogue)
         self.seg_handle = h
@@ -1073,6 +1092,8 @@ class BatchGroup:
         n_active = 0
         finished = []
         emitted = drafted = accepted = chunk_tokens = 0
+        tr = tracer()
+        traced = tr.enabled
         for slot, req in self.active():
             if self.chunk_len and req.chunk_pos < self.bucket:
                 # Prefilling at segment entry: the chunk stage advanced the
@@ -1084,9 +1105,15 @@ class BatchGroup:
                 old = req.chunk_pos
                 req.chunk_pos = min(old + self.chunk_len, self.bucket)
                 chunk_tokens += req.chunk_pos - old
+                if traced:
+                    tr.async_instant("prefill_chunk", req.seq, slot=slot,
+                                     cursor=req.chunk_pos,
+                                     tokens=req.chunk_pos - old)
                 if req.chunk_pos >= self.bucket:
                     ctok = self.prog._outs[self._ctok_out]
                     req.board(slot, int(ctok[slot, 0]))
+                    if traced:
+                        tr.async_instant("first_token", req.seq, slot=slot)
                     self.tokens_written += min(self.bucket, self.max_seq)
                     self._on_chunk_complete(slot, req)
                     if req.remaining() <= 0:
@@ -1105,13 +1132,28 @@ class BatchGroup:
                 drafted += d
                 accepted += a
                 req.note_spec(d, a)
+                if traced:
+                    tr.async_instant("decode_segment", req.seq, slot=slot,
+                                     tokens=int(len(take)), drafted=d,
+                                     accepted=a)
             else:
                 take = toks_seg[slot, : min(self.seg_len, need)]
+                if traced:
+                    tr.async_instant("decode_segment", req.seq, slot=slot,
+                                     tokens=int(len(take)))
             req.extend(take)
             if req.remaining() <= 0:
                 finished.append(req)
                 self.release_slot(slot)
         self.tokens_written += emitted if self.spec_k else n_active * self.seg_len
+        if traced and self._seg_tr0:
+            tr.complete("segment", self._seg_tr0, self._seg_tr0 + seconds,
+                        track="batcher", bucket=self.bucket,
+                        n_active=n_active, finished=len(finished),
+                        chunk_tokens=chunk_tokens)
+            self._seg_tr0 = 0.0
+        if self.telemetry is not None and chunk_tokens:
+            self.telemetry.count("chunk_tokens", chunk_tokens)
         res = {"n_active": n_active, "finished": finished, "seconds": seconds}
         if self.spec_k:
             res["drafted"], res["accepted"] = drafted, accepted

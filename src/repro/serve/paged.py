@@ -46,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.trace import tracer
 from repro.serve.batcher import BatchGroup, segments_for
 
 
@@ -533,6 +534,7 @@ class PagedBatchGroup(BatchGroup):
         plans: List[_Plan] = []
         rows: List = []
         by_prompt: Dict[bytes, _Plan] = {}
+        tr = tracer()
         for r in requests:
             pb = r.prompt.tobytes()
             # Drafting: every joiner must run its own prefill row — the
@@ -547,6 +549,9 @@ class PagedBatchGroup(BatchGroup):
                     self.pool.incref(blocks)
                     self.pool.counters["prefix_hits"] += 1
                     self.pool.counters["prefill_rows_shared"] += 1
+                    if tr.enabled:
+                        tr.async_instant("prefix_hit", r.seq, kind="prompt",
+                                         blocks=len(blocks))
                     plans.append(_Plan(r, "cached", pinned=list(blocks),
                                        first_token=tok0))
                     continue
@@ -554,6 +559,8 @@ class PagedBatchGroup(BatchGroup):
                 if src is not None:
                     self.pool.counters["prefix_hits"] += 1
                     self.pool.counters["prefill_rows_shared"] += 1
+                    if tr.enabled:
+                        tr.async_instant("prefix_hit", r.seq, kind="wave")
                     plans.append(_Plan(r, "dup", src=src))
                     continue
             plan = _Plan(r, "row", row=len(rows))
@@ -572,6 +579,7 @@ class PagedBatchGroup(BatchGroup):
         time — but completed prompts re-enter the chain/prompt caches for
         later waves (:meth:`_on_chunk_complete`)."""
         plans: List[_Plan] = []
+        tr = tracer()
         for r in requests:
             if self.prefix_enabled and not self.spec_k:
                 hit = self.pool.lookup_prompt(r.prompt.tobytes())
@@ -580,6 +588,9 @@ class PagedBatchGroup(BatchGroup):
                     self.pool.incref(blocks)
                     self.pool.counters["prefix_hits"] += 1
                     self.pool.counters["prefill_rows_shared"] += 1
+                    if tr.enabled:
+                        tr.async_instant("prefix_hit", r.seq, kind="prompt",
+                                         blocks=len(blocks))
                     plans.append(_Plan(r, "cached", pinned=list(blocks),
                                        first_token=tok0))
                     continue
@@ -601,6 +612,7 @@ class PagedBatchGroup(BatchGroup):
                     "seconds": seconds}
         if self.chunk_len:
             return self._merge_chunked_paged(plans, seconds)
+        tr = tracer()
         free = self.free_slots()
         if self.spec_k:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
@@ -634,6 +646,8 @@ class PagedBatchGroup(BatchGroup):
             req = plan.req
             self.slots[slot] = req
             req.board(slot, int(first))
+            if tr.enabled:
+                tr.async_instant("first_token", req.seq, slot=slot)
         # Join boundary: tok/pos rows and the table always changed; the
         # pool leaves only when some block was actually written (an all-
         # cached wave re-uploads just the small control buffers).
@@ -749,6 +763,7 @@ class PagedBatchGroup(BatchGroup):
             tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
             pcur_b, ptoks_b = self.prog._ins[2], self.prog._ins[3]
             draft_bufs, dneg = [], []
+        tr = tracer()
         wrote_pool = False
         for plan in plans:
             slot = free.pop(0)
@@ -785,6 +800,8 @@ class PagedBatchGroup(BatchGroup):
             req.chunk_pos = pcur0
             if pcur0 >= self.bucket:
                 req.board(slot, first)
+                if tr.enabled:
+                    tr.async_instant("first_token", req.seq, slot=slot)
         for b in (tok_b, ptok_b, pos_b, pcur_b, ptoks_b):
             if b is not None:
                 self.prog.invalidate(b)
@@ -820,6 +837,10 @@ class PagedBatchGroup(BatchGroup):
             self.pool.incref(lead)
             self.pool.counters["prefix_hits"] += 1
             self.pool.counters["prefix_blocks_shared"] += len(lead)
+            tr = tracer()
+            if tr.enabled:
+                tr.async_instant("prefix_hit", req.seq, kind="chain",
+                                 blocks=len(lead))
         return lead
 
     def _on_chunk_complete(self, slot: int, req) -> None:
@@ -896,7 +917,24 @@ class PagedBatchGroup(BatchGroup):
             self.pool.note_tokens(res["n_active"] * self.seg_len
                                   + res.get("accepted", 0)
                                   + res.get("chunk_tokens", 0))
+        self._gauge_pool()
         return res
+
+    def _gauge_pool(self) -> None:
+        """Stream the pool's occupancy into the rolling telemetry registry
+        (gauges per tier plus a blocks-in-use observation stream, so
+        ``metrics()`` carries p50/p99 occupancy over the window)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        s = self.pool.stats()
+        tel.gauge("pool_blocks_total", s["blocks_total"])
+        tel.gauge("pool_blocks_in_use", s["blocks_in_use"])
+        tel.gauge("pool_blocks_free", s["blocks_free"])
+        tel.gauge("pool_blocks_cached", s["blocks_cached"])
+        tel.gauge("pool_kv_bytes_allocated", s["kv_bytes_allocated"])
+        tel.gauge("pool_kv_bytes_touched", s["kv_bytes_touched"])
+        tel.observe("pool_blocks_in_use_obs", s["blocks_in_use"])
 
     def detach(self) -> None:
         """Persist the *current* pool buffers back into the PoolState before

@@ -35,7 +35,9 @@ from repro.core.device import DeviceGroup
 from repro.core.runtime import Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
+from repro.core.trace import tracer
 from repro.serve.admission import DeadlineAdmission, PoolAdmission, edf_key
+from repro.serve.telemetry import Telemetry
 from repro.serve.batcher import (
     BatchGroup,
     Buckets,
@@ -273,7 +275,8 @@ class InferenceServer:
                  kernels: Optional[ModelKernels] = None,
                  paged: Optional[PagedSpec] = None,
                  draft: Optional[DraftSpec] = None,
-                 chunk_len: int = 0) -> None:
+                 chunk_len: int = 0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
@@ -302,6 +305,11 @@ class InferenceServer:
         self.max_new_cap = int(max_new_cap)
         self.max_wait_s = max_wait_ms / 1e3
         self.admission = admission or DeadlineAdmission()
+        # Streaming telemetry: one registry shared by the server, the
+        # admission layer, and every batch group it forms (rolling
+        # quantiles the point-in-time stats() dict cannot provide).
+        self.telemetry = telemetry or Telemetry()
+        self.admission.telemetry = self.telemetry
         self.pad_id = pad_id
         self._cv = threading.Condition()
         self._poke = False  # wake-up latch: survives notifies that fire
@@ -348,32 +356,38 @@ class InferenceServer:
         now = time.monotonic()
         deadline = None if deadline_s is None else now + deadline_s
         handle = RequestHandle(len(prompt), bucket, max_new_tokens, deadline)
+        tr = tracer()
         with self._cv:
             if self._closing:
                 raise RuntimeError("server is closed")
             self._stats["submitted"] += 1
+            self.telemetry.count("requests_submitted")
             req = _Request(handle, self.buckets.pad(prompt, bucket, self.pad_id),
                            bucket, max_new_tokens, deadline, next(self._seq))
+            if tr.enabled:
+                tr.async_begin("request", req.seq, bucket=bucket,
+                               prompt_len=len(prompt), gen=max_new_tokens)
             if self.paged is not None and not self.pool_admission.admit_submit(
                     self._blocks_needed(bucket, max_new_tokens),
                     self._pool_capacity(bucket)):
                 # Never servable: this request's forecast depth exceeds the
                 # pool outright — reject now rather than defer forever.
-                self._stats["rejected"] += 1
-                handle._reject(
-                    f"request needs {self._blocks_needed(bucket, max_new_tokens)}"
-                    f" KV blocks, pool capacity is {self._pool_capacity(bucket)}"
-                )
+                self._reject(req, tr,
+                             f"request needs "
+                             f"{self._blocks_needed(bucket, max_new_tokens)}"
+                             f" KV blocks, pool capacity is "
+                             f"{self._pool_capacity(bucket)}", "pool")
                 return handle
             if not self.admission.admit(now, deadline, bucket,
                                         self._segments_left(max_new_tokens),
                                         n_chunks=self._n_chunks(bucket)):
-                self._stats["rejected"] += 1
-                handle._reject(
-                    f"deadline {deadline_s * 1e3:.1f}ms below forecast for "
-                    f"bucket {bucket}"
-                )
+                self._reject(req, tr,
+                             f"deadline {deadline_s * 1e3:.1f}ms below "
+                             f"forecast for bucket {bucket}", "deadline")
                 return handle
+            if tr.enabled:
+                tr.async_instant("admission", req.seq, admitted=True,
+                                 bucket=bucket)
             q = self._pending.setdefault(bucket, [])
             q.append(req)
             q.sort(key=lambda r: edf_key(r.deadline, r.seq))
@@ -385,7 +399,10 @@ class InferenceServer:
             s = dict(self._stats)
             mem = self._memory_fold()
         occ = s.pop("occupancy_sum")
-        s["mean_occupancy"] = occ / s["segments"] if s["segments"] else 0.0
+        # occupancy_mean is the canonical key (guarded: 0.0 when no segment
+        # ran yet); mean_occupancy is kept as an alias for older consumers.
+        s["occupancy_mean"] = occ / s["segments"] if s["segments"] else 0.0
+        s["mean_occupancy"] = s["occupancy_mean"]
         s["acceptance"] = (s["tokens_accepted"] / s["tokens_drafted"]
                            if s["tokens_drafted"] else None)
         s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
@@ -394,17 +411,19 @@ class InferenceServer:
         s["chunk_len"] = self.chunk_len
         return s
 
-    @property
     def metrics(self) -> dict:
         """Operator-facing snapshot: pool/slot utilization (blocks in use /
         free / peak, prefix-cache hits, CoW copies, allocated-vs-touched KV
-        bytes), per-group transfer & cache-hit counters, and each live
-        group's last run metrics (which themselves carry the per-run
-        transfer counters the Introspector records)."""
+        bytes), per-group transfer & cache-hit counters, each live group's
+        last run metrics (which themselves carry the per-run transfer
+        counters the Introspector records), and the streaming telemetry
+        snapshot (rolling p50/p95/p99 + EMA for TTFT, inter-token latency,
+        queue wait, segment time, acceptance, occupancy)."""
         with self._cv:
             mem = self._memory_fold()
             runs = {b: dict(g.last_run_metrics)
                     for b, g in self._groups.items()}
+        self._gauge_memory(mem)
         return {
             "memory": mem,
             "groups": {g.name: g.transfer_stats() for g in self.groups},
@@ -417,7 +436,25 @@ class InferenceServer:
                     self.admission.model.acceptance(self.draft.k)
                     if self.draft else None),
             },
+            "telemetry": self.telemetry.snapshot(),
         }
+
+    def _gauge_memory(self, mem: dict) -> None:
+        """Fold the memory snapshot into telemetry gauges (blocks/bytes per
+        tier — today's pool is single-tier, device; the key names carry the
+        tier so a host tier slots in alongside)."""
+        for k, v in mem.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            self.telemetry.gauge(f"mem_{k}", v)
+
+    def prometheus(self, prefix: str = "enginecl") -> str:
+        """Prometheus-style text exposition of the streaming telemetry
+        (memory gauges refreshed from the live pools first)."""
+        with self._cv:
+            mem = self._memory_fold()
+        self._gauge_memory(mem)
+        return self.telemetry.prometheus(prefix)
 
     # Within one bucket's group lineage (successive groups re-use the same
     # logical pool/capacity), capacity-like keys take the max; across
@@ -480,10 +517,10 @@ class InferenceServer:
         with self._cv:
             self._closing = True
             if not drain:
+                tr = tracer()
                 for q in self._pending.values():
                     for r in q:
-                        self._stats["rejected"] += 1
-                        r.handle._reject("server closed")
+                        self._reject(r, tr, "server closed", "closed")
                     q.clear()
             self._cv.notify_all()
         self._thread.join(timeout)
@@ -537,8 +574,12 @@ class InferenceServer:
             for grp in self._groups.values():
                 victims.extend(grp.fail_all([repr(exc)]))
             self._groups.clear()
+            tr = tracer()
             for req in victims:
                 self._stats["failed"] += 1
+                self.telemetry.count("requests_failed")
+                if tr.enabled:
+                    tr.async_end("request", req.seq, status="failed")
                 req.handle._fail(ServeError(f"batcher crashed: {exc!r}"))
 
     def _pending_any(self) -> bool:
@@ -583,6 +624,7 @@ class InferenceServer:
                                      self.scheduler, bucket, self.max_batch,
                                      self.seg_len, self._max_seq(bucket),
                                      chunk_len=self.chunk_len)
+                grp.telemetry = self.telemetry
                 self._groups[bucket] = grp
                 self._board(grp, now)
             else:
@@ -625,12 +667,16 @@ class InferenceServer:
             self.admission.model.observe("segment", grp.bucket, res["seconds"])
             self._stats["segments"] += 1
             self._stats["occupancy_sum"] += res["n_active"]
+            self.telemetry.observe("segment_s", res["seconds"])
+            self.telemetry.observe("occupancy", res["n_active"])
             drafted = res.get("drafted", 0)
             if drafted:
                 self._stats["tokens_drafted"] += drafted
                 self._stats["tokens_accepted"] += res["accepted"]
                 self.admission.model.observe_acceptance(
                     self.draft.k, res["accepted"] / drafted)
+                self.telemetry.observe("acceptance",
+                                       res["accepted"] / drafted)
             for req in res["finished"]:
                 self._retire(req)
         # Merging rewrites the segment Program's host mirrors, so it is only
@@ -642,8 +688,13 @@ class InferenceServer:
             if not self.chunk_len:  # chunked joins run no prefill Program
                 self.admission.model.observe("prefill", grp.bucket,
                                              res["seconds"])
+                self.telemetry.observe("prefill_s", res["seconds"])
+            tr = tracer()
             for req in res["failed"]:
                 self._stats["failed"] += 1
+                self.telemetry.count("requests_failed")
+                if tr.enabled:
+                    tr.async_end("request", req.seq, status="failed")
                 req.handle._fail(
                     ServeError("; ".join(res.get("errors", ["prefill failed"])))
                 )
@@ -677,6 +728,7 @@ class InferenceServer:
         free = len(grp.free_slots())
         wave: List[_Request] = []
         reserved = 0
+        tr = tracer()
         while q and len(wave) < free:
             # Deadline admission first: a doomed head request must be culled
             # (popped + rejected) even when the pool cannot board it — a
@@ -686,8 +738,9 @@ class InferenceServer:
                                         self._segments_left(q[0].gen),
                                         n_chunks=self._n_chunks(grp.bucket)):
                 req = q.pop(0)
-                self._stats["rejected"] += 1
-                req.handle._reject("deadline unreachable at boarding time")
+                self._reject(req, tr,
+                             "deadline unreachable at boarding time",
+                             "deadline_boarding")
                 continue
             if not self.pool_admission.admit_board(
                     grp.reserve_estimate(q[0]),
@@ -695,21 +748,60 @@ class InferenceServer:
                 if not q[0].deferred:  # count requests, not wake-ups
                     q[0].deferred = True
                     self._stats["deferred"] += 1
+                    self.telemetry.count("requests_deferred")
+                    if tr.enabled:
+                        tr.async_instant("deferred", q[0].seq,
+                                         bucket=grp.bucket)
                 break
             req = q.pop(0)
             req.handle.t_admitted = time.monotonic()
+            self.telemetry.observe("queue_wait_s",
+                                   req.handle.t_admitted
+                                   - req.handle.t_arrival)
+            if tr.enabled:
+                tr.async_instant("board", req.seq, bucket=grp.bucket)
             reserved += grp.reserve_estimate(req)
             wave.append(req)
         if wave:
             self._stats["prefill_waves"] += 1
             grp.start_prefill(wave, self._notify)
 
+    def _reject(self, req: _Request, tr, reason: str, kind: str) -> None:
+        """Resolve one request as rejected (stats + telemetry + trace)."""
+        self._stats["rejected"] += 1
+        self.telemetry.count("requests_rejected")
+        if tr.enabled:
+            tr.async_instant("admission", req.seq, admitted=False, kind=kind)
+            tr.async_end("request", req.seq, status="rejected", kind=kind)
+        req.handle._reject(reason)
+
     def _retire(self, req: _Request) -> None:
         self._stats["completed"] += 1
         self._stats["tokens_out"] += req.gen
         req.handle._finish(np.asarray(req.tokens[: req.gen], np.int32))
+        h = req.handle
+        self.telemetry.count("requests_completed")
+        self.telemetry.count("tokens_out", req.gen)
+        latency = h.t_done - h.t_arrival
+        self.telemetry.observe("latency_s", latency)
+        if h.t_first_token is not None:
+            ttft = h.t_first_token - h.t_arrival
+            self.telemetry.observe("ttft_s", ttft)
+            if req.gen > 1:
+                # Inter-token latency: decode time amortized over the
+                # tokens after the first (matches the bench harness's
+                # external (latency - ttft)/(n - 1) definition exactly).
+                self.telemetry.observe(
+                    "itl_s", (latency - ttft) / (req.gen - 1))
+        tr = tracer()
+        if tr.enabled:
+            tr.async_end("request", req.seq, status="ok", tokens=req.gen)
 
     def _fail_group(self, grp: BatchGroup, errors: Sequence[str]) -> None:
+        tr = tracer()
         for req in grp.fail_all(errors):
             self._stats["failed"] += 1
+            self.telemetry.count("requests_failed")
+            if tr.enabled:
+                tr.async_end("request", req.seq, status="failed")
             req.handle._fail(ServeError("; ".join(errors)))

@@ -153,11 +153,18 @@ def make_generate(cfg, api, *, jit: bool = True):
         chain = jax.jit(chain, static_argnums=(4,), donate_argnums=(1,))
 
     def generate(params, batch, gen: int, *, cache=None):
+        from repro.core.trace import tracer
+
+        tr = tracer()
         b, s = batch["tokens"].shape
         if cache is None:
             cache = zeros_cache(cfg, api, b, s + gen)
-        tok, cache = prefill(params, batch, cache)
-        toks, _, _ = chain(params, cache, tok, jnp.int32(s), gen - 1)
+        # Spans cover host-side dispatch (JAX dispatch is async); device
+        # time shows up in the runtime's execute spans when co-executed.
+        with tr.span("generate.prefill", track="generate", batch=b, seq=s):
+            tok, cache = prefill(params, batch, cache)
+        with tr.span("generate.chain", track="generate", steps=gen - 1):
+            toks, _, _ = chain(params, cache, tok, jnp.int32(s), gen - 1)
         return jnp.concatenate([tok, toks], axis=1)
 
     return generate

@@ -274,7 +274,7 @@ def test_metrics_expose_pool_and_per_run_transfers(model):
     p = prompts_for(cfg, 81, 1)[0]
     with paged_server(cfg, api, params, name="met") as srv:
         srv.submit(p, 4).result(timeout=300)
-        m = srv.metrics
+        m = srv.metrics()
     for key in ("blocks_in_use", "blocks_free", "blocks_peak", "prefix_hits",
                 "cow", "kv_bytes_allocated", "kv_bytes_touched"):
         assert key in m["memory"], (key, m["memory"])

@@ -132,7 +132,7 @@ def test_server_contiguous_spec_midstream_bit_identity(model, weak_draft,
     for m in mets:
         assert m["drafted"] == m["accepted"] + m["rejected_drafts"]
         assert 0.0 <= m["acceptance"] <= 1.0
-    spec = srv.metrics["speculation"]
+    spec = srv.metrics()["speculation"]
     assert spec["k"] == 2
     assert spec["tokens_drafted"] == sum(m["drafted"] for m in mets)
 
