@@ -255,6 +255,29 @@ def serve_bench(rows: list[str], full: bool,
         json.dump(out, f, indent=2, sort_keys=True)
 
 
+def multigroup_bench(rows: list[str], full: bool,
+                     json_path: str = "BENCH_serve.json") -> None:
+    """Multi-group co-executed paged serving: 1-vs-2-group scaling at equal
+    offered load and load-balance efficiency under a 3:1 rating skew
+    (simulated device speeds, HGuided placement).  Merges under the
+    ``multigroup_scaling`` key of ``BENCH_serve.json`` (run it after the
+    ``serve`` table, which rewrites that file)."""
+    from benchmarks import serve_load as S
+
+    out = S.multigroup_scaling(n_requests=32 if full else 16)
+    b, sk = out["balanced"], out["skewed"]
+    rows.append(f"serve_multigroup_scaling,0,{b['scaling_x']:.2f}")
+    rows.append(f"serve_multigroup_efficiency,0,{sk['efficiency']:.3f}")
+    try:
+        with open(json_path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {}
+    doc["multigroup_scaling"] = out
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+
 def decode_bench(rows: list[str], full: bool,
                  json_path: str = "BENCH_decode.json") -> None:
     """Ragged flash-decode vs the dense decode-attention path across cache
@@ -408,7 +431,7 @@ def roofline(rows: list[str]) -> None:
 
 
 KNOWN_TABLES = ("usability", "overhead", "coexec", "async", "pipeline",
-                "serve", "decode", "spec", "roofline")
+                "serve", "multigroup", "decode", "spec", "roofline")
 
 
 def main() -> None:
@@ -458,6 +481,8 @@ def main() -> None:
                        json_path=args.pipeline_json)
     if "serve" in args.tables:
         serve_bench(rows, args.full, json_path=args.serve_json)
+    if "multigroup" in args.tables:
+        multigroup_bench(rows, args.full, json_path=args.serve_json)
     if "decode" in args.tables:
         decode_bench(rows, args.full, json_path=args.decode_json)
     if "spec" in args.tables:

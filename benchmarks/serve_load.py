@@ -134,6 +134,128 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
     }
 
 
+def _mg_pass(cfg, api, params, *, kernels, groups, scheduler, n_requests,
+             plen, gen, seg_len, max_batch, seed,
+             group_batches=None) -> dict:
+    """One multi-group pass: burst-submit ``n_requests`` and measure
+    delivered tokens/s over the makespan.  Device speeds are simulated
+    (``sim_time_per_wi``) so the cell measures *scheduling* — concurrent
+    member execution and rate-aware placement — not CPU jit noise."""
+    from repro.core import Static  # noqa: F401  (callers pass scheduler)
+    from repro.serve import InferenceServer, PagedSpec
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, plen).astype(np.int32)
+               for _ in range(n_requests)]
+    t0 = time.perf_counter()
+    with InferenceServer(cfg, api, params, groups=groups, scheduler=scheduler,
+                         buckets=(plen,), max_batch=max_batch,
+                         seg_len=seg_len, max_new_cap=gen, max_wait_ms=2.0,
+                         kernels=kernels, paged=PagedSpec(block_len=4),
+                         group_batches=group_batches) as srv:
+        handles = [srv.submit(p, gen) for p in prompts]
+        for h in handles:
+            h.wait(timeout=600)
+        s = srv.stats()
+    wall = time.perf_counter() - t0
+    return {
+        "groups": [g.name for g in groups],
+        "tokens_per_s": s["tokens_out"] / wall if wall > 0 else 0.0,
+        "wall_s": wall,
+        "completed": s["completed"],
+        "slot_migrations": s.get("slot_migrations", 0),
+    }
+
+
+def multigroup_scaling(*, arch: str = "qwen1.5-4b", n_requests: int = 16,
+                       plen: int = 8, gen: int = 8, seg_len: int = 2,
+                       max_batch: int = 4, seed: int = 0) -> dict:
+    """Multi-group co-executed paged serving scaling cell.
+
+    **balanced**: the same offered load (burst of ``n_requests``) served by
+    one 4-slot group vs two co-executed 2-slot groups of the same simulated
+    speed.  A group's package time scales with its slot count, so per-slot
+    rate is constant — the 2-group win is *concurrent member execution*
+    (two segment Programs in flight on two worker threads), target >= 1.5x.
+
+    **skewed**: a 3:1-rated pair (simulated service times 3:1) under
+    HGuided.  Rate-aware placement sizes slot shares and join waves by the
+    rating, so the slow group never dominates the makespan; efficiency =
+    together / (fast alone + slow alone), target >= 0.8.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.core import DeviceGroup, HGuided, Static
+    from repro.models import get_model
+    from repro.models.params import materialize
+    from repro.serve import ModelKernels
+
+    cfg = reduced(get_config(arch))
+    api = get_model(cfg)
+    params = materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(seed),
+                         jnp.float32)
+    kernels = ModelKernels(cfg, api, params)
+    spw, skew = 0.02, 3.0
+    common = dict(kernels=kernels, n_requests=n_requests, plen=plen, gen=gen,
+                  seg_len=seg_len, max_batch=max_batch, seed=seed)
+
+    def one_group(name, t, power=1.0):
+        return [DeviceGroup(name, power=power, sim_time_per_wi=t)]
+
+    def pair(tag, t_fast, t_slow, p_fast=1.0, p_slow=1.0):
+        return [DeviceGroup(f"mg-{tag}-a", power=p_fast,
+                            sim_time_per_wi=t_fast),
+                DeviceGroup(f"mg-{tag}-b", power=p_slow,
+                            sim_time_per_wi=t_slow)]
+
+    # Discarded warmups: jit the segment/prefill programs for every slot
+    # geometry the measured passes use (4; 2+2; 3+1), so compile time never
+    # lands inside a measured makespan.
+    warm = dict(common, n_requests=max_batch)
+    _mg_pass(cfg, api, params, groups=one_group("w1", spw),
+             scheduler=Static(), **warm)
+    _mg_pass(cfg, api, params, groups=pair("w2", spw, spw),
+             scheduler=Static(), **warm)
+    _mg_pass(cfg, api, params, groups=pair("w3", spw, skew * spw, 3.0, 1.0),
+             scheduler=HGuided(), **warm)
+
+    one = _mg_pass(cfg, api, params, groups=one_group("solo", spw),
+                   scheduler=Static(), **common)
+    two = _mg_pass(cfg, api, params, groups=pair("even", spw, spw),
+                   scheduler=Static(), **common)
+    together = _mg_pass(cfg, api, params,
+                        groups=pair("skew", spw, skew * spw, 3.0, 1.0),
+                        scheduler=HGuided(), **common)
+    fast = _mg_pass(cfg, api, params, groups=one_group("fast", spw, 3.0),
+                    scheduler=Static(), **common)
+    slow = _mg_pass(cfg, api, params,
+                    groups=one_group("slow", skew * spw),
+                    scheduler=Static(), **common)
+    eff = together["tokens_per_s"] / max(
+        1e-9, fast["tokens_per_s"] + slow["tokens_per_s"])
+    return {
+        "config": {"n_requests": n_requests, "prompt_len": plen, "gen": gen,
+                   "seg_len": seg_len, "max_batch": max_batch,
+                   "sim_time_per_wi": spw, "skew": skew},
+        "balanced": {
+            "one_group_tokens_per_s": one["tokens_per_s"],
+            "two_group_tokens_per_s": two["tokens_per_s"],
+            "scaling_x": (two["tokens_per_s"]
+                          / max(1e-9, one["tokens_per_s"])),
+            "slot_migrations": two["slot_migrations"],
+        },
+        "skewed": {
+            "together_tokens_per_s": together["tokens_per_s"],
+            "fast_alone_tokens_per_s": fast["tokens_per_s"],
+            "slow_alone_tokens_per_s": slow["tokens_per_s"],
+            "efficiency": eff,
+            "slot_migrations": together["slot_migrations"],
+        },
+    }
+
+
 def run(*, arch: str = "qwen1.5-4b", n_requests: int = 24, plen: int = 8,
         gen: int = 6, seg_len: int = 2, max_batch: int = 4,
         rates=(50.0, 400.0), seed: int = 0) -> dict:

@@ -37,6 +37,7 @@ class DeviceGroup:
         devices: Optional[Sequence[jax.Device]] = None,
         *,
         power: float = 1.0,
+        watts: float = 0.0,
         min_package_groups: int = 1,
         kernel: Optional[Callable] = None,
         sim_time_per_wi: float = 0.0,
@@ -45,6 +46,10 @@ class DeviceGroup:
         self.name = name
         self.devices = list(devices) if devices else [jax.devices()[0]]
         self.power = power
+        # Rated board power (0 = unrated).  Rate-aware placement divides
+        # observed throughput by watts when set, so scheduling optimizes
+        # tokens/joule instead of raw tokens/s (Green Computing rating).
+        self.watts = watts
         self.min_package_groups = min_package_groups
         self.specialized_kernel = kernel
         self.sim_time_per_wi = sim_time_per_wi
@@ -226,6 +231,46 @@ class DeviceGroup:
         lo, hi = int(r * offset_wi), int(r * (offset_wi + size_wi))
         self._cache_put((id(host_buf), version, lo, hi, 0),
                         dev_result[: hi - lo], host_buf)
+
+    def patch_cached(self, program, host_buf, rows, values) -> bool:
+        """Patch leading-axis rows of this group's stashed device copy of
+        ``host_buf`` in place, *without* a version bump.
+
+        Slot migration rewrites a few rows of a mirror the destination group
+        already holds device-resident (the full-range ``stash_output`` entry
+        from its last segment).  Re-uploading the whole mirror would be
+        O(buffer); this is O(rows).  The caller must have already written the
+        same rows into the host mirror, so host and device stay coherent
+        under the *unchanged* version token.
+
+        Returns False (caller must ``invalidate`` instead) when no full-range
+        stash exists — first segment on this group, entry LRU-evicted, or the
+        buffer is uncacheable.  On success, every *other* cached entry for
+        this buffer id is evicted (padded variants under the same version
+        would otherwise serve stale rows) and exactly one transfer is
+        counted for the O(rows) upload."""
+        if any(b is host_buf for b in program._outs):
+            return False
+        version = buffer_version(host_buf)
+        if version is None:
+            return False
+        base_key = (id(host_buf), version, 0, len(host_buf), 0)
+        with self._xfer_lock:
+            self._drain_dead()
+            base = self._xfer_cache.get(base_key)
+            if base is None:
+                return False
+            for k in [k for k in self._xfer_cache
+                      if k[0] == id(host_buf) and k != base_key]:
+                del self._xfer_cache[k]
+        idx = jnp.asarray(np.asarray(rows, np.int32))
+        vals = jax.device_put(jnp.asarray(values), self.device)
+        patched = base.at[idx].set(vals)
+        with self._xfer_lock:
+            self.n_transfers += 1
+            self._xfer_cache[base_key] = patched
+            self._xfer_cache.move_to_end(base_key)
+        return True
 
     def execute_chunk(self, program, offset_wi: int, size_wi: int):
         """Run one package; returns device arrays (async, not blocked).

@@ -11,6 +11,19 @@ import threading
 from typing import Dict
 
 
+def placement_weight(rate, *, power: float = 1.0, watts: float = 0.0) -> float:
+    """One device's placement weight from its observed rate and rating.
+
+    ``rate`` (tokens/s or work-items/s) wins when observed; before any
+    observation the static ``power`` prior stands in.  A non-zero ``watts``
+    rating divides the weight — placement then optimizes perf-per-watt
+    (Green Computing survey) instead of raw throughput."""
+    w = rate if (rate is not None and rate > 0.0) else max(power, 1e-9)
+    if watts > 0.0:
+        w = w / watts
+    return w
+
+
 class ThroughputRater:
     def __init__(self, alpha: float = 0.4) -> None:
         self.alpha = alpha

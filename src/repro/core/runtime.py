@@ -70,9 +70,14 @@ class RunHandle:
     def __init__(self, program: Program, scheduler: Scheduler, n_workers: int,
                  introspector: Optional[Introspector] = None,
                  deps: Sequence["RunHandle"] = (),
-                 epilogue: Optional[Callable[[], None]] = None) -> None:
+                 epilogue: Optional[Callable[[], None]] = None,
+                 targets: Sequence[DeviceGroup] = ()) -> None:
         self.program = program
         self.scheduler = scheduler
+        # Device groups this run executes on (a subset of the runtime's
+        # groups when the submit pinned the run, e.g. per-group serving
+        # sub-batches).  The scheduler partitions work across exactly these.
+        self.targets = list(targets)
         self.introspector = introspector or Introspector()
         self._lock = threading.Lock()
         self._errors: List[str] = []
@@ -296,6 +301,24 @@ class GroupExecutor:
         with self._lock:
             return self._alive
 
+    def add_group(self, group: DeviceGroup, name: str = "enginecl") -> None:
+        """Attach a new group at runtime (elastic join): fresh queue + worker
+        thread, atomic with respect to shutdown.  Idempotent per group."""
+        with self._lock:
+            if not self._alive:
+                raise RuntimeError("executor is shut down")
+            if id(group) in self._queues:
+                return
+            q: "queue.Queue" = queue.Queue()
+            self._queues[id(group)] = q
+            self.groups.append(group)
+            t = threading.Thread(
+                target=self._worker, args=(q,),
+                name=f"{name}-{group.name}-{len(self._threads)}", daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+
     def submit(self, group: DeviceGroup, fn: Callable[[], None],
                on_done: Optional[Callable[[], None]] = None) -> None:
         self.submit_batch([(group, fn, on_done)])
@@ -342,10 +365,21 @@ class Runtime:
     def alive(self) -> bool:
         return self.executor.alive
 
+    def add_group(self, group: DeviceGroup) -> None:
+        """Elastic join: attach a DeviceGroup to a live runtime.  New submits
+        that don't pin ``groups=`` fan out to it; in-flight runs are
+        unaffected (their worker set was fixed at submit time)."""
+        with self._submit_lock:
+            if any(g is group for g in self.groups):
+                return
+            self.executor.add_group(group)
+            self.groups.append(group)
+
     # ---------------------------------------------------------------- submit
     def submit(self, program: Program, scheduler: Scheduler, *,
                after: Optional[Sequence[RunHandle]] = None,
-               epilogue: Optional[Callable[[], None]] = None) -> RunHandle:
+               epilogue: Optional[Callable[[], None]] = None,
+               groups: Optional[Sequence[DeviceGroup]] = None) -> RunHandle:
         """Enqueue one run on the persistent workers; returns immediately.
 
         The run is ordered after (a) every handle in ``after=``, (b) any
@@ -355,10 +389,18 @@ class Runtime:
         threads — the host never blocks — and an upstream failure poisons
         this handle instead of executing on stale data.
 
+        ``groups`` pins the run to a subset of the runtime's device groups
+        (default: all of them) — the scheduler partitions work across the
+        subset only, and only those groups' worker threads are enqueued.
+        Conflict inference still spans all in-flight runs, so runs pinned to
+        disjoint groups over disjoint buffers proceed concurrently while
+        shared-buffer runs stay ordered.
+
         ``epilogue`` (if given) runs exactly once on the last worker after a
         successful run, before the handle completes — dependents observe its
         effects (e.g. ``swap_buffers``).  Validation errors complete the
         handle immediately (``result()`` raises ``RunError``)."""
+        targets = list(groups) if groups else self.groups
         deps: List[RunHandle] = []
         if after is not None:
             deps.extend([after] if isinstance(after, RunHandle) else list(after))
@@ -382,9 +424,9 @@ class Runtime:
                     deps.append(h)
                 elif id(h.program) in linked or conflicts(reads, writes, h):
                     deps.append(h)
-            handle = RunHandle(program, scheduler.clone(), len(self.groups),
+            handle = RunHandle(program, scheduler.clone(), len(targets),
                                introspector=Introspector(sink=_trace_execute),
-                               deps=deps, epilogue=epilogue)
+                               deps=deps, epilogue=epilogue, targets=targets)
             tr = tracer()
             if tr.enabled:
                 tr.instant("submit", track="runtime", kernel=program.label,
@@ -395,7 +437,7 @@ class Runtime:
                 return handle
             self.executor.submit_batch([
                 (g, (lambda g=g, h=handle: self._process(g, h)), handle._worker_finished)
-                for g in self.groups
+                for g in targets
             ])
             self._inflight.append(handle)
         return handle
@@ -435,7 +477,7 @@ class Runtime:
         if not ok:
             return
         handle._mark_started()
-        handle._ensure_prepared(self.groups)
+        handle._ensure_prepared(handle.targets or self.groups)
         # Per-run transfer accounting: runs on one group serialize on its
         # worker thread, so the cumulative-counter delta around this run is
         # exactly what this run caused on this group.

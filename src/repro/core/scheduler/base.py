@@ -65,6 +65,28 @@ class Scheduler:
     def _package_groups(self, device) -> int:  # subclass hook (lock held)
         raise NotImplementedError
 
+    # -- multi-group placement ----------------------------------------------
+    def placement_weights(self, devices, rates=None) -> list:
+        """Relative share each device group should receive when work is
+        *placed* rather than package-scheduled (serving join waves, slot
+        counts).  Adaptive schedulers weight by observed rate (falling back
+        to the static power prior), divided by the device's watts rating
+        when set; ``Static`` overrides this to ignore rates entirely.
+
+        ``rates`` maps device name → observed throughput (or None)."""
+        from repro.core.rating import placement_weight
+
+        rates = rates or {}
+        return [placement_weight(rates.get(d.name), power=d.power,
+                                 watts=getattr(d, "watts", 0.0))
+                for d in devices]
+
+    def rebalances(self) -> bool:
+        """True when this scheduler wants decode slots migrated between
+        groups at segment boundaries (adaptive strategies only — Static's
+        contract is a fixed split)."""
+        return False
+
     # -- adaptive powers ----------------------------------------------------
     def observe(self, device, size_wi: int, seconds: float) -> None:
         """Optional feedback after each completed package (adaptive).

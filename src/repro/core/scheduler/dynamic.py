@@ -23,3 +23,6 @@ class Dynamic(Scheduler):
 
     def _package_groups(self, device) -> int:
         return self._pkg_groups
+
+    def rebalances(self) -> bool:
+        return True

@@ -50,6 +50,9 @@ class HGuided(Scheduler):
         min_groups = max(1, int(round(device.min_package_groups * p_rel)))
         return max(min_groups, groups)
 
+    def rebalances(self) -> bool:
+        return True
+
     def observe(self, device, size_wi: int, seconds: float) -> None:
         if self.adaptive and seconds > 0:
             self._rater.update(id(device), size_wi / seconds)

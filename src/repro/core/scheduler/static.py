@@ -45,6 +45,17 @@ class Static(Scheduler):
             self._plan[id(d)] = (off, groups)
             off += groups
 
+    def placement_weights(self, devices, rates=None) -> list:
+        """Static ignores observed rates: the split is fixed up front from
+        explicit proportions (or power priors), per the paper's contract."""
+        devs = list(devices)
+        if self.props is not None:
+            props = list(self.props)
+            if len(props) == len(devs) - 1:
+                props.append(max(0.0, 1.0 - sum(props)))
+            return [max(0.0, p) for p in props[: len(devs)]]
+        return [d.power for d in devs]
+
     def _package_groups(self, device) -> int:
         raise AssertionError("Static overrides next_package")
 

@@ -81,3 +81,33 @@ class ElasticRunner:
     def on_failure(self, surviving_devices: Sequence):
         """Pod lost: rebuild on the survivors from the last checkpoint."""
         return self.build(surviving_devices)
+
+
+class ElasticServeGroups:
+    """Elastic group management for a live ``InferenceServer``.
+
+    The serving analogue of :class:`ElasticRunner`: instead of rebuilding a
+    mesh from survivors and restoring a checkpoint, the server's
+    ``group_batches`` regime lets a DeviceGroup *join* (fresh per-group
+    block pool, immediately eligible for wave placement) or *drain* (its
+    decode slots migrate to surviving groups at segment boundaries) without
+    dropping in-flight requests — host mirrors are authoritative at
+    boundaries, so no checkpoint round-trip is needed.
+    """
+
+    def __init__(self, server) -> None:
+        self.server = server
+
+    def join(self, group) -> None:
+        """Scale up: add ``group`` to the live server (or un-drain it)."""
+        self.server.join_group(group)
+
+    def drain(self, name: str) -> None:
+        """Scale down: stop placing work on ``name``; active slots migrate
+        off at their next segment boundary and the member dissolves."""
+        self.server.drain_group(name)
+
+    def on_failure(self, lost_name: str) -> None:
+        """Pod is going away: drain it so in-flight decode state moves to
+        the survivors through the O(blocks) migration path."""
+        self.server.drain_group(lost_name)

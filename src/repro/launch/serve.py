@@ -50,6 +50,20 @@ def _groups(coexec: bool):
     ]
 
 
+def _serve_groups(args):
+    """Device groups for server mode: ``--groups N`` (simulated
+    heterogeneous pods, first twice the power of the rest) or the legacy
+    ``--coexec`` pair; one group otherwise."""
+    n = max(args.groups, 2 if args.coexec else 1)
+    if n == 1:
+        return [DeviceGroup("serve:0")]
+    return [
+        DeviceGroup(f"pod-{chr(ord('a') + i)}",
+                    power=(2.0 if i == 0 else 1.0), sim_time_per_wi=0.0)
+        for i in range(n)
+    ]
+
+
 def run_oneshot(cfg, api, params, batch, gen: int):
     """Plain batched generate through the shared prefill+chain helper."""
     return make_generate(cfg, api)(params, batch, gen)
@@ -97,7 +111,8 @@ def _make_draft(cfg, params, args):
     if not args.draft:
         return None
     if args.draft == "self":
-        return DraftSpec(cfg, params, k=args.draft_k)
+        return DraftSpec(cfg, params, k=args.draft_k,
+                         auto_bypass=args.spec_gate)
     import dataclasses
 
     name = args.arch if args.draft == "reduced" else args.draft
@@ -107,7 +122,8 @@ def _make_draft(cfg, params, args):
     dapi = get_model(dcfg)
     dparams = materialize(dapi.param_spec(dcfg, 1),
                           jax.random.PRNGKey(args.seed + 3), jnp.float32)
-    return DraftSpec(dcfg, dparams, k=args.draft_k)
+    return DraftSpec(dcfg, dparams, k=args.draft_k,
+                     auto_bypass=args.spec_gate)
 
 
 def _metrics_pump(server, stop: threading.Event, every: float) -> None:
@@ -138,10 +154,11 @@ def run_server(cfg, api, params, args) -> None:
     ]
     gaps = rng.exponential(1.0 / args.rate, args.requests)
     paged = PagedSpec(block_len=args.block_len) if args.paged else None
+    groups = _serve_groups(args)
     server = InferenceServer(
         cfg, api, params,
-        groups=_groups(args.coexec and not args.paged),
-        scheduler=Static() if args.paged else _schedulers()[args.scheduler],
+        groups=groups,
+        scheduler=_schedulers()[args.scheduler],
         buckets=(args.prompt_len,),
         max_batch=args.max_batch,
         seg_len=args.seg_len,
@@ -150,6 +167,9 @@ def run_server(cfg, api, params, args) -> None:
         paged=paged,
         draft=_make_draft(cfg, params, args),
         chunk_len=args.chunk_len,
+        # --groups opts into per-group batches even for contiguous KV;
+        # legacy --coexec keeps the slot-splitting regime (None = auto).
+        group_batches=True if args.groups > 1 else None,
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
     stop = threading.Event()
@@ -160,11 +180,16 @@ def run_server(cfg, api, params, args) -> None:
             name="metrics-pump", daemon=True)
         pump.start()
     t0 = time.perf_counter()
+    drained = None
     with server:
         handles = []
-        for p, gap in zip(prompts, gaps):
+        for i, (p, gap) in enumerate(zip(prompts, gaps)):
             time.sleep(gap)
             handles.append(server.submit(p, args.gen, deadline_s=deadline))
+            if (args.drain_after and i + 1 == args.drain_after
+                    and server.group_batches and len(groups) > 1):
+                drained = groups[-1].name
+                server.drain_group(drained)
         results = []
         for h in handles:
             # Wait for the *final* state before reading `rejected`: a
@@ -187,12 +212,21 @@ def run_server(cfg, api, params, args) -> None:
         f"{pct}occupancy={s['occupancy_mean']:.2f} "
         f"tokens/s={s['tokens_out'] / wall:.1f}"
     )
+    if server.group_batches:
+        print(f"multi-group: slots={s['placement']['member_slots']} "
+              f"migrations={s['slot_migrations']}"
+              + (f" drained={drained}" if drained else ""))
     if s["tokens_drafted"]:
         print(
             f"speculation k={args.draft_k}: {s['tokens_accepted']}/"
             f"{s['tokens_drafted']} draft tokens accepted "
             f"(acceptance={s['acceptance']:.2f})"
         )
+    if "speculation" in s:
+        g = s["speculation"]
+        print(f"spec gate: {g['speculated_segments']} spec / "
+              f"{g['bypassed_segments']} plain segments "
+              f"({g['probes']} probes)")
     mem = s.get("memory", {})
     if mem.get("mode") == "paged":
         print(
@@ -236,7 +270,19 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=10.0)
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV block pool (block tables "
-                         "+ prefix cache; forces one group + Static)")
+                         "+ prefix cache; with --groups N each group owns "
+                         "its own pool and prefix-cache namespace)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="server mode: co-execute across N simulated device "
+                         "groups, one batch (and, under --paged, one KV "
+                         "block pool) per group; wave placement and slot "
+                         "migration follow --scheduler")
+    ap.add_argument("--drain-after", type=int, default=0,
+                    help="server mode with --groups >1: after this many "
+                         "submissions, drain the last group — its decode "
+                         "slots migrate to the surviving groups at segment "
+                         "boundaries (elastic scale-down; --verify still "
+                         "holds)")
     ap.add_argument("--block-len", type=int, default=4,
                     help="tokens per KV block in --paged mode")
     ap.add_argument("--chunk-len", type=int, default=0,
@@ -254,6 +300,12 @@ def main() -> None:
                          " to one-shot generate (--verify still holds)")
     ap.add_argument("--draft-k", type=int, default=2,
                     help="draft tokens proposed per verify step")
+    ap.add_argument("--spec-gate", action="store_true",
+                    help="auto-bypass speculation when the forecast "
+                         "speedup drops below 1 (plain segments, periodic "
+                         "re-probes; stats()['speculation'] shows the "
+                         "per-bucket mode).  Without it a --draft server "
+                         "drafts every segment")
     ap.add_argument("--verify", action="store_true",
                     help="assert outputs bit-identical to one-shot generate")
     ap.add_argument("--trace-out", default="",

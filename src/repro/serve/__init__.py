@@ -2,6 +2,7 @@ from repro.serve.admission import (  # noqa: F401
     DeadlineAdmission,
     PoolAdmission,
     ServiceModel,
+    SpecGate,
     edf_key,
 )
 from repro.serve.batcher import (  # noqa: F401
@@ -12,11 +13,19 @@ from repro.serve.batcher import (  # noqa: F401
     segments_for,
     spec_segments_for,
 )
+from repro.serve.multigroup import (  # noqa: F401
+    ForceMigrate,
+    MigrationPolicy,
+    RateBalancer,
+    plan_wave,
+    proportional_split,
+)
 from repro.serve.paged import (  # noqa: F401
     BlockPool,
     PagedBatchGroup,
     PagedSpec,
     blocks_needed,
+    validate_paged,
 )
 from repro.serve.server import (  # noqa: F401
     AdmissionError,

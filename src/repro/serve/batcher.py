@@ -471,6 +471,55 @@ class ModelKernels:
         )
         return buf, cur[:, None], tok, ptok, pos, tcache, dcache
 
+    def _plain_scan(self, seg_len: int, decode, tok, ptok, pos,
+                    tcache, dcache):
+        """Bypass branch of the speculative segment: ``seg_len`` plain
+        decode steps on the target cache only, shaped like
+        :meth:`_spec_scan`'s outputs (``cnt = seg_len`` per slot, tokens in
+        ``buf[:seg_len]``) so harvest reads either branch identically.
+        Greedy decode makes the emitted bits equal to the draft/verify
+        path's — bypass never changes served streams.  The draft cache
+        passes through untouched: its staleness on a later re-probe only
+        lowers the acceptance rate, never correctness (verify is always
+        against the target)."""
+        k = self.draft.k
+        params = self.params
+        b = tok.shape[0]
+
+        def body(carry, _):
+            tok, pos, cache = carry
+            ntok, cache = decode(params, cache, tok, pos[:, 0])
+            return (ntok, pos + 1, cache), ntok[:, 0]
+
+        (tok2, pos2, tcache), toks = jax.lax.scan(
+            body, (tok, pos, tcache), None, length=seg_len
+        )
+        toks = jnp.swapaxes(toks, 0, 1)  # (b, seg_len)
+        buf = jnp.zeros((b, seg_len * (k + 1)), jnp.int32)
+        buf = buf.at[:, :seg_len].set(toks)
+        cnt = jnp.full((b, 1), seg_len, jnp.int32)
+        # tok2's predecessor: the segment's second-to-last emission (or the
+        # incoming tok for seg_len=1) — what the first draft step re-decodes
+        # when speculation resumes.
+        ptok2 = toks[:, seg_len - 2:seg_len - 1] if seg_len > 1 else tok
+        return buf, cnt, tok2, ptok2, pos2, tcache, dcache
+
+    def _gated_scan(self, seg_len: int, step, decode, spec_on,
+                    tok, ptok, pos, tcache, dcache):
+        """Segment-granular draft on/off switch: one host-written flag
+        (``spec_on[0, 0]``) selects draft/verify or plain decode via
+        ``lax.cond`` — flipping modes is a tiny buffer invalidation, never
+        a rebuild or recompile."""
+
+        def spec_branch(op):
+            return self._spec_scan(seg_len, step, *op)
+
+        def plain_branch(op):
+            return self._plain_scan(seg_len, decode, *op)
+
+        return jax.lax.cond(spec_on[0, 0] > 0, spec_branch, plain_branch,
+                            (tok, ptok, pos, tcache, dcache))
+
     def spec_segment_kernel(self, seg_len: int) -> Callable:
         """Speculative variant of :meth:`segment_kernel`:
         ``fn(offset, tok, ptok, pos, *target_leaves, *draft_leaves) ->
@@ -484,18 +533,20 @@ class ModelKernels:
         if fn is not None:
             return fn
         step = self._spec_step()
+        decode = make_decode_step(self.cfg, self.api)
         treedef, bax = self.treedef, self.bax
         dtreedef, dbax = self.dtreedef, self.dbax
         nt = len(self.bax_leaves)
         tu = jax.tree_util
 
-        def seg(offset, tok, ptok, pos, *leaves):
+        def seg(offset, tok, ptok, pos, *rest):
+            spec_on, leaves = rest[-1], rest[:-1]
             tcache = tu.tree_unflatten(treedef, leaves[:nt])
             tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
             dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
             dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
-            buf, cnt, tok, ptok, pos, tcache, dcache = self._spec_scan(
-                seg_len, step, tok, ptok, pos, tcache, dcache
+            buf, cnt, tok, ptok, pos, tcache, dcache = self._gated_scan(
+                seg_len, step, decode, spec_on, tok, ptok, pos, tcache, dcache
             )
             tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), tcache, bax)
             dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, a, 0), dcache, dbax)
@@ -516,13 +567,15 @@ class ModelKernels:
         if fn is not None:
             return fn
         step = self._spec_step()
+        decode = make_decode_step(self.cfg, self.api)
         treedef, bax = self.treedef, self.bax
         dtreedef, dbax = self.dtreedef, self.dbax
         nt = len(self.bax_leaves)
         n_layers = self.cfg.n_layers
         tu = jax.tree_util
 
-        def seg(offset, tok, ptok, pos, table, *leaves):
+        def seg(offset, tok, ptok, pos, table, *rest):
+            spec_on, leaves = rest[-1], rest[:-1]
             tcache = tu.tree_unflatten(treedef, leaves[:nt])
             tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
             tcache = dict(tcache)
@@ -531,8 +584,8 @@ class ModelKernels:
             )
             dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
             dcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), dcache, dbax)
-            buf, cnt, tok, ptok, pos, tcache, dcache = self._spec_scan(
-                seg_len, step, tok, ptok, pos, tcache, dcache
+            buf, cnt, tok, ptok, pos, tcache, dcache = self._gated_scan(
+                seg_len, step, decode, spec_on, tok, ptok, pos, tcache, dcache
             )
             tcache = dict(tcache)
             tcache.pop("table")
@@ -583,13 +636,15 @@ class ModelKernels:
         if fn is not None:
             return fn
         step = self._spec_step()
+        decode = make_decode_step(self.cfg, self.api)
         stage = self._mixed_chunk_stage(bucket, chunk_len)
         treedef, bax = self.treedef, self.bax
         dtreedef, dbax = self.dtreedef, self.dbax
         nt = len(self.bax_leaves)
         tu = jax.tree_util
 
-        def seg(offset, tok, ptok, pos, pcur, ptoks, *leaves):
+        def seg(offset, tok, ptok, pos, pcur, ptoks, *rest):
+            spec_on, leaves = rest[-1], rest[:-1]
             tcache = tu.tree_unflatten(treedef, leaves[:nt])
             tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
             dcache = tu.tree_unflatten(dtreedef, leaves[nt:])
@@ -597,8 +652,8 @@ class ModelKernels:
             decoding = pcur >= bucket
             ctok, pcur2, tcache, dcache = stage(
                 tok, pcur, ptoks, tcache, dcache, decoding)
-            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._spec_scan(
-                seg_len, step, tok, ptok, pos, tcache, dcache
+            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._gated_scan(
+                seg_len, step, decode, spec_on, tok, ptok, pos, tcache, dcache
             )
             completed = ~decoding & (pcur2 >= bucket)
             last_ptok = ptoks[:, bucket - 1:bucket]
@@ -624,6 +679,7 @@ class ModelKernels:
         if fn is not None:
             return fn
         step = self._spec_step()
+        decode = make_decode_step(self.cfg, self.api)
         stage = self._mixed_chunk_stage(bucket, chunk_len)
         treedef, bax = self.treedef, self.bax
         dtreedef, dbax = self.dtreedef, self.dbax
@@ -631,7 +687,8 @@ class ModelKernels:
         n_layers = self.cfg.n_layers
         tu = jax.tree_util
 
-        def seg(offset, tok, ptok, pos, pcur, ptoks, table, *leaves):
+        def seg(offset, tok, ptok, pos, pcur, ptoks, table, *rest):
+            spec_on, leaves = rest[-1], rest[:-1]
             tcache = tu.tree_unflatten(treedef, leaves[:nt])
             tcache = tu.tree_map(lambda x, a: jnp.moveaxis(x, 0, a), tcache, bax)
             tcache = dict(tcache)
@@ -643,8 +700,8 @@ class ModelKernels:
             decoding = pcur >= bucket
             ctok, pcur2, tcache, dcache = stage(
                 tok, pcur, ptoks, tcache, dcache, decoding)
-            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._spec_scan(
-                seg_len, step, tok, ptok, pos, tcache, dcache
+            buf, cnt, tok2, ptok2, pos2, tcache, dcache = self._gated_scan(
+                seg_len, step, decode, spec_on, tok, ptok, pos, tcache, dcache
             )
             completed = ~decoding & (pcur2 >= bucket)
             last_ptok = ptoks[:, bucket - 1:bucket]
@@ -708,7 +765,7 @@ class BatchGroup:
 
     def __init__(self, kernels: ModelKernels, runtime, scheduler,
                  bucket: int, n_slots: int, seg_len: int, max_seq: int,
-                 chunk_len: int = 0) -> None:
+                 chunk_len: int = 0, target=None) -> None:
         self.kernels = kernels
         self.runtime = runtime
         self.scheduler = scheduler
@@ -718,6 +775,12 @@ class BatchGroup:
         self.max_seq = max_seq
         self.chunk_len = chunk_len  # 0 = whole-prompt prefill Programs
         self.spec_k = kernels.spec_k  # draft depth; 0 = speculation off
+        # Device groups this batch's runs are pinned to (None = all runtime
+        # groups, the legacy slot-splitting co-exec regime).  Per-group
+        # serving sub-batches pin to exactly one group each.
+        self.target = list(target) if target else None
+        self.spec_gate = None  # set by the server when drafting (SpecGate)
+        self._seg_mode = "spec" if self.spec_k else "plain"
         self.slots: List[Optional[object]] = [None] * n_slots  # _Request per slot
         self.dead = False
         self.tokens_written = 0  # KV positions actually written (memory_stats)
@@ -759,6 +822,11 @@ class BatchGroup:
             prog = Program().in_(tok).in_(ptok).in_(pos)
             for b in leaves:
                 prog.in_(b)
+            # spec_on rides LAST (after every donated leaf) so the donate
+            # range and every leaf slice below stay position-stable; the
+            # kernel branches on it per segment (SpecGate auto-bypass).
+            self._spec_on = np.ones((n_slots, 1), np.int32)
+            prog.in_(self._spec_on)
             prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
             prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
             prog.out(np.zeros_like(pos))
@@ -818,6 +886,8 @@ class BatchGroup:
             prog = Program().in_(tok).in_(ptok).in_(pos).in_(pcur).in_(ptoks)
             for b in leaves:
                 prog.in_(b)
+            self._spec_on = np.ones((n_slots, 1), np.int32)
+            prog.in_(self._spec_on)
             prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
             prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
             prog.out(np.zeros_like(pos)).out(np.zeros_like(pcur))
@@ -882,7 +952,10 @@ class BatchGroup:
         groups allocate their full capacity up front (every slot row at
         ``max_seq``, whatever depth is recorded)."""
         first_leaf = (3 if self.spec_k else 2) + (2 if self.chunk_len else 0)
-        allocated = sum(b.nbytes for b in self.prog._ins[first_leaf:])
+        allocated = sum(
+            b.nbytes
+            for b in self.prog._ins[first_leaf:first_leaf + self.n_leaves]
+        )
         capacity = self.n_slots * self.max_seq
         return {
             "mode": "contiguous",
@@ -953,7 +1026,7 @@ class BatchGroup:
                             f"prefill_{self.bucket}")
             prog.work_items(j, 1)
             self._prefill_prog = prog
-            h = self.runtime.submit(prog, self.scheduler)
+            h = self.runtime.submit(prog, self.scheduler, groups=self.target)
         self.prefill_handle = h
         h.add_done_callback(lambda _h: notify())
 
@@ -985,7 +1058,7 @@ class BatchGroup:
         if self.spec_k:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
                                     self.prog._ins[2])
-            leaf_bufs = self.prog._ins[3:]
+            leaf_bufs = self.prog._ins[3:3 + self.n_leaves]
             tok0, ptok0 = prog._outs[0], prog._outs[1]
             wave_leaves = prog._outs[2:]
         else:
@@ -1024,7 +1097,7 @@ class BatchGroup:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
                                     self.prog._ins[2])
             pcur_b, ptoks_b = self.prog._ins[3], self.prog._ins[4]
-            leaf_bufs = self.prog._ins[5:]
+            leaf_bufs = self.prog._ins[5:5 + self.n_leaves]
             neg = (self.kernels.leaf_neg_init(self.max_seq)
                    + self.kernels.draft_leaf_neg_init(self.max_seq))
         else:
@@ -1060,6 +1133,14 @@ class BatchGroup:
         epilogue runs worker-side, so the just-produced token/pos/cache
         buffers become the next segment's inputs *device-resident*."""
         assert self.seg_handle is None
+        if self.spec_k and self.spec_gate is not None:
+            # SpecGate auto-bypass: decide this segment's mode and flip the
+            # device-side flag only when it changes (one tiny re-upload).
+            want = 1 if self.spec_gate.decide(self.bucket) else 0
+            if int(self._spec_on[0, 0]) != want:
+                self._spec_on[:] = want
+                self.prog.invalidate(self._spec_on)
+            self._seg_mode = "spec" if want else "plain"
 
         def epilogue(prog=self.prog, pairs=self._swap_pairs):
             for i_in, i_out in pairs:
@@ -1070,7 +1151,8 @@ class BatchGroup:
         tr = tracer()
         self._seg_tr0 = tr.now() if tr.enabled else 0.0
         h = self.runtime.submit(self.prog, self.scheduler,
-                                after=after, epilogue=epilogue)
+                                after=after, epilogue=epilogue,
+                                groups=self.target)
         self.seg_handle = h
         h.add_done_callback(lambda _h: notify())
 
@@ -1125,13 +1207,19 @@ class BatchGroup:
             if self.spec_k:
                 # Ragged emission: this segment produced cnt tokens for the
                 # slot (seg_len steps, each 1 + its accepted draft depth).
+                # A bypassed (plain-mode) segment reports cnt = seg_len and
+                # contributes nothing to draft accounting — plain segments
+                # must not pollute the acceptance EMA.
                 c = int(cnt[slot, 0])
                 take = toks_seg[slot, : min(c, need)]
                 emitted += c
-                d, a = self.spec_k * self.seg_len, c - self.seg_len
-                drafted += d
-                accepted += a
-                req.note_spec(d, a)
+                if self._seg_mode == "spec":
+                    d, a = self.spec_k * self.seg_len, c - self.seg_len
+                    drafted += d
+                    accepted += a
+                    req.note_spec(d, a)
+                else:
+                    d = a = 0
                 if traced:
                     tr.async_instant("decode_segment", req.seq, slot=slot,
                                      tokens=int(len(take)), drafted=d,
@@ -1157,6 +1245,7 @@ class BatchGroup:
         res = {"n_active": n_active, "finished": finished, "seconds": seconds}
         if self.spec_k:
             res["drafted"], res["accepted"] = drafted, accepted
+            res["mode"] = self._seg_mode
         if self.chunk_len:
             res["chunk_tokens"] = chunk_tokens
         return res
@@ -1172,6 +1261,69 @@ class BatchGroup:
         additionally releases the slot's blocks and re-points its table at
         the sink block."""
         self.slots[slot] = None
+
+    # ------------------------------------------------------------ migration
+    def at_boundary(self) -> bool:
+        """True between runs: no segment or prefill in flight, so the host
+        mirrors are the authoritative slot state (every package was written
+        back and the epilogue swap ran)."""
+        return self.seg_handle is None and self.prefill_handle is None
+
+    def can_accept_migration(self, src: "BatchGroup", slot: int) -> bool:
+        """Could ``src``'s ``slot`` move here right now?  Requires a free
+        slot and a quiescent destination — a prefill in flight would race
+        the wave merge for the free slot we are about to fill."""
+        return (not self.dead and self.at_boundary()
+                and bool(self.free_slots()))
+
+    def migrate_slot_to(self, slot: int, dst: "BatchGroup") -> bool:
+        """Move one active request — tokens, positions, and its entire KV
+        slot state — into a free slot of ``dst``.  Legal only at a segment
+        boundary on both sides: after the epilogue swap, ``prog._ins`` rows
+        ARE the current state (write-back keeps host mirrors coherent), so
+        migration is a host row copy plus an O(rows)/O(blocks) device patch
+        (:meth:`DeviceGroup.patch_cached`) — never a full-cache rewrite.
+        The stream stays bit-identical: decode is deterministic in the slot
+        state, and the copied rows are exactly the state the source would
+        have decoded from.  Returns False (no partial effects) when either
+        side is busy, ``dst`` is full, or its pool cannot cover the blocks."""
+        req = self.slots[slot]
+        if req is None or self.dead or dst.dead or dst is self:
+            return False
+        if self.seg_handle is not None or not dst.can_accept_migration(self, slot):
+            return False
+        d = dst.free_slots()[0]
+        if not self._copy_slot_state(slot, dst, d):
+            return False
+        dst.slots[d] = req
+        req.slot = d
+        self.release_slot(slot)
+        return True
+
+    def _row_bufs(self) -> List[np.ndarray]:
+        """The slot-leading input buffers a migration must carry (everything
+        except ``spec_on``, which is group-local gate state)."""
+        bufs = list(self.prog._ins)
+        return bufs[:-1] if self.spec_k else bufs
+
+    def _copy_slot_state(self, slot: int, dst: "BatchGroup", d: int) -> bool:
+        """Contiguous layout: copy the slot row of every input buffer
+        (token/pos controls + every cache-leaf mirror) into ``dst``'s row
+        ``d`` and propagate the rows to ``dst``'s device copies."""
+        for src_buf, dst_buf in zip(self._row_bufs(), dst._row_bufs()):
+            dst_buf[d] = src_buf[slot]
+            dst._patch_or_invalidate(dst_buf, [d])
+        return True
+
+    def _patch_or_invalidate(self, buf: np.ndarray, rows: Sequence[int]) -> None:
+        """Propagate freshly written host-mirror rows to this batch's device
+        groups: in-place O(rows) patch of the stashed device copy when one
+        exists (version unchanged — host and device now agree again), full
+        invalidation (one re-upload next segment) otherwise."""
+        groups = self.target or self.runtime.groups
+        vals = buf[np.asarray(rows, np.intp)]
+        if not all(g.patch_cached(self.prog, buf, rows, vals) for g in groups):
+            self.prog.invalidate(buf)
 
     def fail_all(self, errors: Sequence[str]) -> List[object]:
         """A segment failed: group state is unrecoverable (mirrors may hold

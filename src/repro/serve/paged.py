@@ -320,15 +320,16 @@ class PagedBatchGroup(BatchGroup):
     buffers are pool leaves of shape ``(n_blocks, layers, block_len, ...)``
     plus a ``(n_slots, nmax)`` int32 block table; joins allocate (or share)
     blocks and scatter prefill rows block-wise into the pool mirrors; exits
-    decref, pointing the dead slot's table at the sink block.  Requires a
-    single DeviceGroup + Static scheduler (pool buffers are indivisible —
-    the slot axis cannot be split across devices that don't share the
-    pool); the server enforces this."""
+    decref, pointing the dead slot's table at the sink block.  Pool buffers
+    are indivisible — the slot axis cannot be split across devices that do
+    not share the pool — so each PagedBatchGroup is pinned to exactly one
+    DeviceGroup; multi-group paged serving runs one group (and one pool)
+    per device via the server's ``group_batches`` regime."""
 
     def __init__(self, kernels, runtime, scheduler, bucket: int,
                  n_slots: int, seg_len: int, max_seq: int,
                  spec: PagedSpec, state: Optional[PoolState] = None,
-                 chunk_len: int = 0) -> None:
+                 chunk_len: int = 0, target=None) -> None:
         self.spec = spec
         self.state = state if state is not None else PoolState()
         self.window = int(kernels.cfg.window or 0)
@@ -348,7 +349,7 @@ class PagedBatchGroup(BatchGroup):
         self.block_len = bl
         self.prefix_enabled = bool(spec.prefix_cache) and not self.window
         super().__init__(kernels, runtime, scheduler, bucket, n_slots,
-                         seg_len, max_seq, chunk_len=chunk_len)
+                         seg_len, max_seq, chunk_len=chunk_len, target=target)
 
     # ----------------------------------------------------- program assembly
     def _build_segment_program(self):
@@ -394,6 +395,10 @@ class PagedBatchGroup(BatchGroup):
             prog = Program().in_(tok).in_(ptok).in_(pos).in_(self.table)
             for b in all_leaves:
                 prog.in_(b)
+            # Speculation gate flag rides last (never donated or swapped):
+            # the kernel branches to a plain decode scan when it reads 0.
+            self._spec_on = np.ones((n_slots, 1), np.int32)
+            prog.in_(self._spec_on)
             prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
             prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
             prog.out(np.zeros_like(pos))
@@ -455,6 +460,8 @@ class PagedBatchGroup(BatchGroup):
                     .in_(ptoks).in_(self.table))
             for b in all_leaves:
                 prog.in_(b)
+            self._spec_on = np.ones((n_slots, 1), np.int32)
+            prog.in_(self._spec_on)
             prog.out(toks_seg).out(np.zeros((n_slots, 1), np.int32))
             prog.out(np.zeros_like(tok)).out(np.zeros_like(ptok))
             prog.out(np.zeros_like(pos)).out(np.zeros_like(pcur))
@@ -617,7 +624,7 @@ class PagedBatchGroup(BatchGroup):
         if self.spec_k:
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
                                     self.prog._ins[2])
-            draft_bufs = self.prog._ins[4 + self._n_pool:]
+            draft_bufs = self.prog._ins[4 + self._n_pool:-1]
             tok0 = prog._outs[0] if prog is not None else None
             ptok0 = prog._outs[1] if prog is not None else None
             wave_leaves = (prog._outs[2:2 + self._n_pool]
@@ -757,7 +764,7 @@ class PagedBatchGroup(BatchGroup):
             tok_b, ptok_b, pos_b = (self.prog._ins[0], self.prog._ins[1],
                                     self.prog._ins[2])
             pcur_b, ptoks_b = self.prog._ins[3], self.prog._ins[4]
-            draft_bufs = self.prog._ins[6 + self._n_pool:]
+            draft_bufs = self.prog._ins[6 + self._n_pool:-1]
             dneg = self.kernels.draft_leaf_neg_init(self.max_seq)
         else:
             tok_b, ptok_b, pos_b = self.prog._ins[0], None, self.prog._ins[1]
@@ -907,6 +914,52 @@ class PagedBatchGroup(BatchGroup):
         self.table[slot, :] = BlockPool.SINK
         self.prog.invalidate(self.table)
 
+    # ------------------------------------------------------- slot migration
+    def can_accept_migration(self, src, slot) -> bool:
+        if not super().can_accept_migration(src, slot):
+            return False
+        need = len(src.slot_blocks[slot] or ())
+        return self.pool.free_count + self.pool.reclaimable() >= need
+
+    def _row_bufs(self) -> list:
+        """Slot-row-leading inputs only: the control carries, plus (when
+        drafting) the contiguous draft-cache mirrors.  The table and the
+        pool leaves are block-addressed and migrate separately."""
+        nctl = (3 if self.spec_k else 2) + (2 if self.chunk_len else 0)
+        bufs = list(self.prog._ins[:nctl])
+        if self.spec_k:
+            bufs += list(self.prog._ins[nctl + 1 + self._n_pool:-1])
+        return bufs
+
+    def _copy_slot_state(self, slot, dst, d) -> bool:
+        """Paged handoff: allocate fresh blocks in the destination pool,
+        copy the slot's physical block rows across (O(blocks), not
+        O(max_seq)), rewrite the destination table row, then move the
+        control/draft rows.  Allocation happens FIRST so failure leaves no
+        partial effects; the copied bytes are the slot's exact KV timeline,
+        so decode from them is bit-identical (shared source blocks become
+        private destination copies — sharing is lost, bits are not)."""
+        src_blocks = self.slot_blocks[slot] or []
+        try:
+            new_blocks = dst.pool.alloc(len(src_blocks))
+        except RuntimeError:
+            return False
+        if src_blocks:
+            src_idx = np.asarray(src_blocks, np.int64)
+            dst_idx = np.asarray(new_blocks, np.int64)
+            for s_leaf, d_leaf in zip(self._pool_leaves(),
+                                      dst._pool_leaves()):
+                d_leaf[dst_idx] = s_leaf[src_idx]
+                dst._patch_or_invalidate(d_leaf, new_blocks)
+        dst.table[d, :] = BlockPool.NULL
+        dst.table[d, : len(new_blocks)] = new_blocks
+        dst._patch_or_invalidate(dst.table, [d])
+        for s_buf, d_buf in zip(self._row_bufs(), dst._row_bufs()):
+            d_buf[d] = s_buf[slot]
+            dst._patch_or_invalidate(d_buf, [d])
+        dst.slot_blocks[d] = list(new_blocks)
+        return True
+
     def harvest_segment(self) -> dict:
         res = super().harvest_segment()
         if "errors" not in res:
@@ -957,19 +1010,21 @@ class PagedBatchGroup(BatchGroup):
         return super().fail_all(errors)
 
 
-def validate_paged(cfg, groups, scheduler, spec: PagedSpec) -> None:
-    """Fail fast on configurations the paged subsystem cannot honor."""
-    from repro.core.scheduler.static import Static
+def validate_paged(cfg, groups, scheduler, spec: PagedSpec, *,
+                   group_batches: bool = True) -> None:
+    """Fail fast on configurations the paged subsystem cannot honor.
 
-    if len(groups) != 1:
+    Multi-group paged serving runs one :class:`PagedBatchGroup` — and one
+    block pool — per DeviceGroup (the server's ``group_batches`` regime);
+    any scheduler may drive placement and rebalancing.  The only rejected
+    shape is multiple groups *without* per-group pools: a single pool is
+    one indivisible device allocation and cannot be slot-split."""
+    if len(groups) != 1 and not group_batches:
         raise ValueError(
-            "paged serving needs exactly one DeviceGroup: the block pool is "
-            "a single indivisible device allocation (slot-axis co-execution "
-            "would split it)"
+            "paged serving across multiple DeviceGroups requires per-group "
+            "block pools (group_batches): a single block pool is one "
+            "indivisible device allocation and cannot be slot-split"
         )
-    if not isinstance(scheduler, Static):
-        raise ValueError("paged serving requires the Static scheduler "
-                         "(pool buffers cannot be chunked)")
     if cfg.seq_shard_cache:
         raise ValueError("paged serving is incompatible with seq_shard_cache")
     if cfg.kernel_impl in ("pallas", "pallas_interpret") and \

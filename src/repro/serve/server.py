@@ -36,7 +36,12 @@ from repro.core.runtime import Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
 from repro.core.trace import tracer
-from repro.serve.admission import DeadlineAdmission, PoolAdmission, edf_key
+from repro.serve.admission import (
+    DeadlineAdmission,
+    PoolAdmission,
+    SpecGate,
+    edf_key,
+)
 from repro.serve.telemetry import Telemetry
 from repro.serve.batcher import (
     BatchGroup,
@@ -45,6 +50,12 @@ from repro.serve.batcher import (
     chunks_for,
     segments_for,
     spec_segments_for,
+)
+from repro.serve.multigroup import (
+    MigrationPolicy,
+    RateBalancer,
+    plan_wave,
+    proportional_split,
 )
 from repro.serve.paged import PagedBatchGroup, PagedSpec, validate_paged
 from repro.serve.step import DraftSpec
@@ -246,6 +257,15 @@ class InferenceServer:
                        the first local device).  With several groups plus a
                        Dynamic/HGuided scheduler, each batch's slot axis is
                        split across them — the paper's co-execution regime.
+    group_batches    : run one sub-batch (and, paged, one block pool +
+                       prefix-cache namespace) per DeviceGroup instead of
+                       slot-splitting a single batch: join waves are placed
+                       by the scheduler's rate-aware placement weights and
+                       decode slots migrate between members at segment
+                       boundaries (Dynamic/HGuided).  Default: on for
+                       multi-group paged serving, off otherwise.
+    migration        : MigrationPolicy override (default RateBalancer for
+                       rebalancing schedulers under group_batches).
     scheduler        : engine scheduler for slot partitioning (default Static).
     buckets          : prompt-length shape buckets (right-padding contract).
     max_batch        : KV slots per bucket group == max decode batch.
@@ -276,13 +296,25 @@ class InferenceServer:
                  paged: Optional[PagedSpec] = None,
                  draft: Optional[DraftSpec] = None,
                  chunk_len: int = 0,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 group_batches: Optional[bool] = None,
+                 migration: Optional[MigrationPolicy] = None) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
         self.paged = paged
+        # Per-group sub-batch regime: one (Paged)BatchGroup — and, paged,
+        # one block pool — per DeviceGroup, with rate-aware wave placement
+        # and slot migration between members.  Default on for multi-group
+        # paged serving (a single pool cannot be slot-split); contiguous
+        # multi-group keeps the legacy slot-splitting co-execution unless
+        # opted in.
+        self.group_batches = (bool(group_batches)
+                              if group_batches is not None
+                              else (paged is not None and len(self.groups) > 1))
         if paged is not None:
-            validate_paged(cfg, self.groups, self.scheduler, paged)
+            validate_paged(cfg, self.groups, self.scheduler, paged,
+                           group_batches=self.group_batches)
         if draft is not None:
             validate_draft(cfg, draft)
         self.draft = draft
@@ -310,6 +342,30 @@ class InferenceServer:
         # quantiles the point-in-time stats() dict cannot provide).
         self.telemetry = telemetry or Telemetry()
         self.admission.telemetry = self.telemetry
+        # Speculation auto-bypass (opt-in via DraftSpec.auto_bypass):
+        # forecast per-bucket whether drafted segments actually beat plain
+        # ones and flip the kernels' gate input accordingly (re-probing
+        # the losing mode periodically).  Ungated spec servers draft every
+        # segment — existing accounting contracts rely on that.
+        self.spec_gate = (SpecGate(self.admission.model, draft.k)
+                          if draft is not None and draft.auto_bypass
+                          else None)
+        # Per-member decode-slot counts are fixed at construction (paged
+        # PoolState shapes must stay stable across group re-forms):
+        # max_batch total slots split power-proportionally, one minimum.
+        # Rate-awareness lives in wave placement and migration instead.
+        self._member_slots: dict = {}
+        self._draining: set = set()
+        if self.group_batches:
+            shares = proportional_split(
+                self.scheduler.placement_weights(self.groups),
+                self.max_batch, minimum=1)
+            self._member_slots = {g.name: s
+                                  for g, s in zip(self.groups, shares)}
+        self._policy = migration if migration is not None else (
+            RateBalancer()
+            if self.group_batches and self.scheduler.rebalances()
+            else MigrationPolicy())
         self.pad_id = pad_id
         self._cv = threading.Condition()
         self._poke = False  # wake-up latch: survives notifies that fire
@@ -324,10 +380,13 @@ class InferenceServer:
             "segments": 0, "occupancy_sum": 0, "tokens_out": 0,
             "prefill_waves": 0, "joins": 0, "midstream_joins": 0,
             "deferred": 0, "tokens_drafted": 0, "tokens_accepted": 0,
+            "slot_migrations": 0,
         }
         self._mem_totals: dict = {}  # bucket -> folded memory_stats of
         #   dissolved contiguous groups (per-bucket lineage, max-rule)
-        self._pool_states: dict = {}  # bucket -> PoolState (persistent paged)
+        # bucket -> PoolState legacy; (bucket, group name) under
+        # group_batches — each DeviceGroup owns a pool + prefix namespace.
+        self._pool_states: dict = {}
         self._thread = threading.Thread(
             target=self._loop, name="enginecl-batcher", daemon=True
         )
@@ -379,7 +438,8 @@ class InferenceServer:
                              f"{self._pool_capacity(bucket)}", "pool")
                 return handle
             if not self.admission.admit(now, deadline, bucket,
-                                        self._segments_left(max_new_tokens),
+                                        self._segments_left(max_new_tokens,
+                                                            bucket),
                                         n_chunks=self._n_chunks(bucket)):
                 self._reject(req, tr,
                              f"deadline {deadline_s * 1e3:.1f}ms below "
@@ -409,6 +469,13 @@ class InferenceServer:
         s["memory"] = mem
         s["admission"] = self.admission.stats()
         s["chunk_len"] = self.chunk_len
+        if self.spec_gate is not None:
+            s["speculation"] = self.spec_gate.stats(list(self.buckets.sizes))
+        if self.group_batches:
+            s["placement"] = {
+                "member_slots": dict(self._member_slots),
+                "draining": sorted(self._draining),
+            }
         return s
 
     def metrics(self) -> dict:
@@ -421,8 +488,13 @@ class InferenceServer:
         queue wait, segment time, acceptance, occupancy)."""
         with self._cv:
             mem = self._memory_fold()
-            runs = {b: dict(g.last_run_metrics)
-                    for b, g in self._groups.items()}
+            if self.group_batches:
+                runs = {f"{b}:{nm}": dict(m.last_run_metrics)
+                        for b, ms in self._groups.items()
+                        for nm, m in ms.items()}
+            else:
+                runs = {b: dict(g.last_run_metrics)
+                        for b, g in self._groups.items()}
         self._gauge_memory(mem)
         return {
             "memory": mem,
@@ -474,7 +546,13 @@ class InferenceServer:
                 self._fold_memory_into(per_bucket.setdefault(b, {}),
                                        st.pool.stats())
         for b, g in self._groups.items():
-            if not isinstance(g, PagedBatchGroup):
+            if isinstance(g, dict):  # group_batches: member map
+                for nm, m in g.items():
+                    if not isinstance(m, PagedBatchGroup):
+                        self._fold_memory_into(
+                            per_bucket.setdefault((b, nm), {}),
+                            m.memory_stats())
+            elif not isinstance(g, PagedBatchGroup):
                 self._fold_memory_into(per_bucket.setdefault(b, {}),
                                        g.memory_stats())
         acc: dict = {}
@@ -506,7 +584,13 @@ class InferenceServer:
     def _pool_capacity(self, bucket: int) -> int:
         from repro.serve.paged import pool_capacity
 
-        return pool_capacity(self.paged, self.max_batch,
+        # Under group_batches each member owns a pool sized for its slot
+        # share; a request is servable if the largest member's pool can
+        # cover it.
+        n_slots = (max(self._member_slots.values())
+                   if self.group_batches and self._member_slots
+                   else self.max_batch)
+        return pool_capacity(self.paged, n_slots,
                              self._max_seq(bucket),
                              self.kernels.cfg.window or 0)
 
@@ -572,7 +656,11 @@ class InferenceServer:
                 victims.extend(q)
                 q.clear()
             for grp in self._groups.values():
-                victims.extend(grp.fail_all([repr(exc)]))
+                if isinstance(grp, dict):
+                    for m in grp.values():
+                        victims.extend(m.fail_all([repr(exc)]))
+                else:
+                    victims.extend(grp.fail_all([repr(exc)]))
             self._groups.clear()
             tr = tracer()
             for req in victims:
@@ -592,7 +680,25 @@ class InferenceServer:
         # 1. advance live groups (harvest finished segments, merge prefills,
         #    board joiners, chain next segments, dissolve idle groups).
         for bucket in list(self._groups):
-            grp = self._groups[bucket]
+            entry = self._groups[bucket]
+            if isinstance(entry, dict):  # group_batches: member map
+                self._advance_members(bucket, entry, now)
+                for nm in list(entry):
+                    m = entry[nm]
+                    if m.dead or (m.idle()
+                                  and (not self._pending.get(bucket)
+                                       or nm in self._draining)):
+                        if isinstance(m, PagedBatchGroup):
+                            m.detach()
+                        else:
+                            self._fold_memory_into(
+                                self._mem_totals.setdefault((bucket, nm), {}),
+                                m.memory_stats())
+                        del entry[nm]
+                if not entry:
+                    del self._groups[bucket]
+                continue
+            grp = entry
             self._advance_group(grp, now)
             if grp.dead or (grp.idle() and not self._pending.get(bucket)):
                 if isinstance(grp, PagedBatchGroup):
@@ -610,6 +716,12 @@ class InferenceServer:
             oldest = min(r.handle.t_arrival for r in q)
             expires = oldest + self.max_wait_s
             if len(q) >= self.max_batch or now >= expires or self._closing:
+                if self.group_batches:
+                    members: dict = {}
+                    self._groups[bucket] = members
+                    self._ensure_members(bucket, members)
+                    self._board_members(bucket, members, now, set())
+                    continue
                 if self.paged is not None:
                     from repro.serve.paged import PoolState
 
@@ -625,6 +737,7 @@ class InferenceServer:
                                      self.seg_len, self._max_seq(bucket),
                                      chunk_len=self.chunk_len)
                 grp.telemetry = self.telemetry
+                grp.spec_gate = self.spec_gate
                 self._groups[bucket] = grp
                 self._board(grp, now)
             else:
@@ -642,12 +755,16 @@ class InferenceServer:
                     + self.seg_len * (self.draft.k + 1))
         return bucket + segments_for(self.max_new_cap, self.seg_len) * self.seg_len
 
-    def _segments_left(self, gen: int) -> int:
+    def _segments_left(self, gen: int, bucket: int) -> int:
         """Decode segments a request with ``gen`` tokens still owed needs —
         the admission forecast's work unit.  Under speculation this uses the
         observed expected tokens-per-step (1 + acceptance·k), so deadline
-        forecasts tighten as acceptance evidence accumulates."""
+        forecasts tighten as acceptance evidence accumulates; when the
+        bypass gate forecasts this bucket runs plain segments, so does the
+        forecast."""
         if self.draft is None:
+            return segments_for(gen, self.seg_len)
+        if self.spec_gate is not None and not self.spec_gate.speculating(bucket):
             return segments_for(gen, self.seg_len)
         tps = self.admission.model.tokens_per_step(self.draft.k)
         return spec_segments_for(gen, self.seg_len, tps)
@@ -659,12 +776,39 @@ class InferenceServer:
         return chunks_for(bucket, self.chunk_len) if self.chunk_len else 0
 
     def _advance_group(self, grp: BatchGroup, now: float) -> None:
+        """Legacy single-batch advance: harvest/merge, board, chain."""
+        if not self._harvest_merge(grp, None):
+            return
+        # Starting a prefill wave touches no group mirrors — it overlaps a
+        # running segment so joiners are ready at the next boundary.
+        if grp.prefill_handle is None:
+            self._board(grp, now)
+        if grp.seg_handle is None and any(grp.slots):
+            grp.submit_segment(self._notify)
+
+    def _harvest_merge(self, grp: BatchGroup, gname: Optional[str]) -> bool:
+        """Harvest a finished segment and merge a finished prefill (cv
+        held); feeds the service model (segment/prefill times, per-group
+        rates, spec-vs-plain mode times).  Returns False when the group
+        failed — its requests are already resolved."""
         if grp.seg_handle is not None and grp.seg_handle.done():
             res = grp.harvest_segment()
             if "errors" in res:
                 self._fail_group(grp, res["errors"])
-                return
-            self.admission.model.observe("segment", grp.bucket, res["seconds"])
+                return False
+            model = self.admission.model
+            model.observe("segment", grp.bucket, res["seconds"])
+            mode = res.get("mode")
+            if mode is not None:
+                # Mode-split EMAs drive the SpecGate's speedup forecast.
+                model.observe("seg_spec" if mode == "spec" else "seg_plain",
+                              grp.bucket, res["seconds"])
+            if gname is not None and res["seconds"] > 0:
+                # Capacity rate (slots, not occupancy: speed, not load) —
+                # the scheduler's placement signal for this member.
+                rate = grp.n_slots * grp.seg_len / res["seconds"]
+                model.observe_rate(grp.bucket, gname, rate)
+                self.telemetry.gauge(f"group_rate_{gname}", rate)
             self._stats["segments"] += 1
             self._stats["occupancy_sum"] += res["n_active"]
             self.telemetry.observe("segment_s", res["seconds"])
@@ -707,14 +851,169 @@ class InferenceServer:
                 if req.remaining() <= 0:
                     self._retire(req)
                     grp.release_slot(slot)
-        # Starting a prefill wave touches no group mirrors — it overlaps a
-        # running segment so joiners are ready at the next boundary.
-        if grp.prefill_handle is None:
-            self._board(grp, now)
-        if grp.seg_handle is None and any(grp.slots):
-            grp.submit_segment(self._notify)
+        return True
 
-    def _board(self, grp: BatchGroup, now: float) -> None:
+    # ------------------------------------------------- group_batches regime
+    def _make_member(self, bucket: int, g: DeviceGroup):
+        """One per-DeviceGroup sub-batch: pinned to its group (``target``),
+        driven by a private Static scheduler (the single member device
+        takes every slot in one package), sized by the fixed slot split."""
+        n_slots = self._member_slots.get(g.name, 0)
+        if n_slots < 1:
+            return None
+        if self.paged is not None:
+            from repro.serve.paged import PoolState
+
+            state = self._pool_states.setdefault((bucket, g.name),
+                                                 PoolState())
+            grp = PagedBatchGroup(self.kernels, self.runtime, Static(),
+                                  bucket, n_slots, self.seg_len,
+                                  self._max_seq(bucket), self.paged, state,
+                                  chunk_len=self.chunk_len, target=[g])
+        else:
+            grp = BatchGroup(self.kernels, self.runtime, Static(), bucket,
+                             n_slots, self.seg_len, self._max_seq(bucket),
+                             chunk_len=self.chunk_len, target=[g])
+        grp.telemetry = self.telemetry
+        grp.spec_gate = self.spec_gate
+        return grp
+
+    def _ensure_members(self, bucket: int, members: dict) -> None:
+        """Instantiate missing members (initial formation, and groups that
+        joined the live server since this bucket's members formed)."""
+        for g in self.groups:
+            if g.name in self._draining or g.name in members:
+                continue
+            m = self._make_member(bucket, g)
+            if m is not None:
+                members[g.name] = m
+
+    def _advance_members(self, bucket: int, members: dict,
+                         now: float) -> None:
+        """One scheduling pass over a bucket's member groups: harvest and
+        merge each, apply drain and policy migrations at the boundaries
+        that line up, place the join wave, chain next segments."""
+        self._ensure_members(bucket, members)
+        for nm in list(members):
+            self._harvest_merge(members[nm], nm)
+        live = {nm: m for nm, m in members.items() if not m.dead}
+        hold: set = set()
+        if len(live) > 1:
+            self._drain_migrations(live)
+            moves, hold = self._policy.plan(
+                live, self._member_weights(bucket, live))
+            for src, slot, dst in moves:
+                if live[src].migrate_slot_to(slot, live[dst]):
+                    self._stats["slot_migrations"] += 1
+                    self.telemetry.count("slot_migrations")
+        self._board_members(bucket, live, now, hold)
+        for nm, grp in live.items():
+            if grp.seg_handle is not None or nm in hold:
+                continue
+            if nm in self._draining and any(grp.slots):
+                others = [m for o, m in live.items()
+                          if o != nm and o not in self._draining]
+                if others and any(not m.at_boundary() for m in others):
+                    # An acceptor's boundary is coming: hold this member's
+                    # slots at the boundary so they can migrate out then.
+                    continue
+            if any(grp.slots):
+                grp.submit_segment(self._notify)
+
+    def _drain_migrations(self, members: dict) -> None:
+        """Move every slot of draining members that can leave right now to
+        a non-draining member at a boundary with room."""
+        for nm in list(members):
+            if nm not in self._draining:
+                continue
+            grp = members[nm]
+            if not grp.at_boundary():
+                continue
+            for slot, req in enumerate(list(grp.slots)):
+                if req is None:
+                    continue
+                for onm, other in members.items():
+                    if onm == nm or onm in self._draining:
+                        continue
+                    if grp.migrate_slot_to(slot, other):
+                        self._stats["slot_migrations"] += 1
+                        self.telemetry.count("slot_migrations")
+                        break
+
+    def _member_weights(self, bucket: int, members: dict) -> dict:
+        devs = [g for g in self.groups if g.name in members]
+        rates = {g.name: self.admission.model.rate(bucket, g.name)
+                 for g in devs}
+        return {g.name: w for g, w in
+                zip(devs, self.scheduler.placement_weights(devs, rates))}
+
+    def _board_members(self, bucket: int, members: dict, now: float,
+                       hold: set) -> None:
+        """Place the pending join wave across boardable members: the
+        scheduler's placement weights (observed per-group rates for
+        adaptive schedulers, fixed proportions for Static) pick how many
+        requests each member prefills this wave."""
+        q = self._pending.get(bucket)
+        if not q:
+            return
+        devs = [g for g in self.groups
+                if g.name in members and g.name not in hold
+                and g.name not in self._draining
+                and members[g.name].prefill_handle is None]
+        if not devs:
+            return
+        rates = {g.name: self.admission.model.rate(bucket, g.name)
+                 for g in devs}
+        weights = self.scheduler.placement_weights(devs, rates)
+        caps = [len(members[g.name].free_slots()) for g in devs]
+        loads = [sum(1 for r in members[g.name].slots if r is not None)
+                 for g in devs]
+        counts = plan_wave(weights, caps, loads, len(q))
+        for g, c in zip(devs, counts):
+            if c > 0:
+                self._board(members[g.name], now, limit=c)
+
+    # --------------------------------------------------------- elastic API
+    def join_group(self, group: DeviceGroup) -> None:
+        """Attach a DeviceGroup to the live server (elastic scale-out) —
+        or reactivate a draining one by name.  The runtime spins up its
+        worker thread immediately; it becomes a boarding and migration
+        target for every bucket at the next scheduling pass."""
+        with self._cv:
+            if not self.group_batches:
+                raise RuntimeError(
+                    "join_group requires group_batches serving")
+            if any(g.name == group.name for g in self.groups):
+                self._draining.discard(group.name)
+                self._cv.notify_all()
+                return
+            self.runtime.add_group(group)
+            self.groups.append(group)
+            shares = proportional_split(
+                self.scheduler.placement_weights(self.groups),
+                self.max_batch, minimum=1)
+            self._member_slots[group.name] = shares[len(self.groups) - 1]
+            self._cv.notify_all()
+
+    def drain_group(self, name: str) -> None:
+        """Stop placing work on ``name`` and migrate its decode slots out
+        at segment boundaries; its per-bucket members dissolve once empty.
+        The DeviceGroup stays attached (``join_group`` reactivates it)."""
+        with self._cv:
+            if not self.group_batches:
+                raise RuntimeError(
+                    "drain_group requires group_batches serving")
+            if not any(g.name == name for g in self.groups):
+                raise ValueError(f"unknown group {name!r}")
+            active = [g.name for g in self.groups
+                      if g.name not in self._draining]
+            if name in active and len(active) <= 1:
+                raise ValueError("cannot drain the only active group")
+            self._draining.add(name)
+            self._cv.notify_all()
+
+    def _board(self, grp: BatchGroup, now: float,
+               limit: Optional[int] = None) -> None:
         """Start a prefill wave for as many pending requests as there are
         free slots, EDF order, re-checking each deadline against the
         forecast of the work *now* remaining.  With a paged pool, boarding
@@ -726,6 +1025,8 @@ class InferenceServer:
         if not q:
             return
         free = len(grp.free_slots())
+        if limit is not None:
+            free = min(free, limit)
         wave: List[_Request] = []
         reserved = 0
         tr = tracer()
@@ -735,7 +1036,8 @@ class InferenceServer:
             # memory deferral would otherwise park it at the head of the EDF
             # queue and starve feasible requests queued behind it.
             if not self.admission.admit(now, q[0].deadline, grp.bucket,
-                                        self._segments_left(q[0].gen),
+                                        self._segments_left(q[0].gen,
+                                                            grp.bucket),
                                         n_chunks=self._n_chunks(grp.bucket)):
                 req = q.pop(0)
                 self._reject(req, tr,

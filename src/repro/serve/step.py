@@ -231,11 +231,18 @@ class DraftSpec:
     """Speculative-decoding draft model: a small config sharing the target's
     tokenizer/vocab, its own params, and the draft depth ``k`` (candidate
     tokens proposed per verify step).  ``k = 1`` is the shallowest useful
-    draft: one candidate, 1–2 tokens emitted per step."""
+    draft: one candidate, 1–2 tokens emitted per step.
+
+    ``auto_bypass=True`` arms the server's ``SpecGate``: segments run
+    plain whenever the forecast speedup (tokens-per-step × measured
+    plain/spec segment-time ratio) drops below 1, with periodic re-probes
+    of the losing mode.  Off by default — an ungated spec server drafts
+    every segment, which keeps drafted/accepted accounting deterministic."""
 
     cfg: Any
     params: Any
     k: int = 2
+    auto_bypass: bool = False
 
     def __post_init__(self):
         if self.k < 1:

@@ -1,0 +1,322 @@
+"""Multi-group co-executed serving: rate-proportional placement math,
+forced slot migration bit-identity (contiguous + paged × plain/spec/
+chunked), elastic drain/join on a live server, O(rows) migration transfer
+accounting, and the speculation auto-bypass gate."""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import DeviceGroup, Dynamic, HGuided, Program, Static
+from repro.core.program import buffer_version
+from repro.core.rating import placement_weight
+from repro.distributed.elastic import ElasticServeGroups
+from repro.models import get_model
+from repro.models import params as P
+from repro.serve import (
+    DraftSpec,
+    ForceMigrate,
+    InferenceServer,
+    PagedSpec,
+    RateBalancer,
+    ServiceModel,
+    SpecGate,
+    make_generate,
+    plan_wave,
+    proportional_split,
+)
+
+PLEN = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("qwen1.5-4b"))
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def reference(model):
+    cfg, api, params = model
+    gen = make_generate(cfg, api)
+
+    def ref(prompt, n):
+        toks = gen(params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, n)
+        return np.asarray(toks)[0]
+
+    return ref
+
+
+def prompts_for(cfg, seed, n, plen=PLEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, plen).astype(np.int32) for _ in range(n)]
+
+
+# ----------------------------------------------------------- placement math
+def test_proportional_split_units():
+    assert proportional_split([1, 1], 4) == [2, 2]
+    assert proportional_split([3, 1], 4) == [3, 1]
+    # largest-remainder keeps the total exact and every share >= minimum
+    assert proportional_split([2, 1, 1], 10, minimum=1) == [4, 3, 3]
+    assert proportional_split([0, 0], 4) == [2, 2]  # degenerate: even split
+    # total below n * minimum: minimum gives way, total is still honored
+    assert sum(proportional_split([1, 1, 1], 2, minimum=1)) == 2
+    assert proportional_split([], 4) == []
+
+
+def test_plan_wave_units():
+    assert plan_wave([1, 1], [4, 4], [0, 0], 4) == [2, 2]
+    # 3:1 weights -> 3:1 placement once loads even out
+    assert plan_wave([3, 1], [4, 4], [0, 0], 4) == [3, 1]
+    # capacity is a hard cap; total may fall short of n
+    assert plan_wave([1, 1], [1, 0], [0, 0], 3) == [1, 0]
+    # pre-existing load steers the wave to the emptier member
+    assert plan_wave([1, 1], [4, 4], [3, 0], 2) == [0, 2]
+    assert plan_wave([1, 1], [4, 4], [0, 0], 0) == [0, 0]
+
+
+def test_placement_weights_rates_and_watts():
+    a = DeviceGroup("a", power=2.0)
+    b = DeviceGroup("b", power=1.0)
+    dyn = Dynamic(2)
+    w = dyn.placement_weights([a, b])
+    assert w[0] / w[1] == pytest.approx(2.0)        # cold: rated power
+    w = dyn.placement_weights([a, b], {"a": 10.0, "b": 30.0})
+    assert w[1] / w[0] == pytest.approx(3.0)        # observed rates win
+    stat = Static().placement_weights([a, b], {"a": 10.0, "b": 30.0})
+    assert stat[0] / stat[1] == pytest.approx(2.0)  # Static ignores rates
+    c = DeviceGroup("c", power=1.0, watts=2.0)
+    w = dyn.placement_weights([b, c], {"b": 30.0, "c": 30.0})
+    assert w[0] / w[1] == pytest.approx(2.0)        # tokens/joule rating
+    assert placement_weight(0.0, power=4.0) == 4.0
+    assert placement_weight(30.0, watts=3.0) == 10.0
+    assert not Static().rebalances()
+    assert Dynamic(2).rebalances() and HGuided().rebalances()
+
+
+# -------------------------------------------------------- migration policies
+class _FakeMember:
+    def __init__(self, active, boundary=True, accept=True, n_slots=4):
+        self.slots = [object() if i < active else None
+                      for i in range(n_slots)]
+        self._b, self._a = boundary, accept
+
+    def at_boundary(self):
+        return self._b
+
+    def can_accept_migration(self, src, slot):
+        return self._a
+
+
+def test_rate_balancer_moves_overshare_to_undershare():
+    m = {"a": _FakeMember(4), "b": _FakeMember(0)}
+    moves, hold = RateBalancer().plan(m, {"a": 1.0, "b": 1.0})
+    assert moves == [("a", 0, "b")] and not hold
+    # within one slot of the proportional share: leave it alone
+    m = {"a": _FakeMember(2), "b": _FakeMember(1)}
+    assert RateBalancer().plan(m, {"a": 2.0, "b": 1.0})[0] == []
+    # opportunistic only: a mid-segment source is never held
+    m = {"a": _FakeMember(4, boundary=False), "b": _FakeMember(0)}
+    moves, hold = RateBalancer().plan(m, {"a": 1.0, "b": 1.0})
+    assert moves == [] and not hold
+    # destination refuses (e.g. pool too full): no move
+    m = {"a": _FakeMember(4), "b": _FakeMember(0, accept=False)}
+    assert RateBalancer().plan(m, {"a": 1.0, "b": 1.0})[0] == []
+
+
+def test_force_migrate_holds_until_common_boundary():
+    fm = ForceMigrate()
+    m = {"a": _FakeMember(2), "b": _FakeMember(1, boundary=False)}
+    moves, hold = fm.plan(m, {})
+    assert moves == [] and hold == {"a"}  # a waits at its boundary
+    m = {"a": _FakeMember(2), "b": _FakeMember(1)}
+    moves, hold = fm.plan(m, {})
+    assert moves == [("a", 0, "b")] and not hold
+    assert fm.moves_planned == 1
+    assert fm.plan({"a": _FakeMember(2)}, {}) == ([], set())  # needs two
+
+
+# -------------------------------------------------------- speculation gate
+def test_spec_gate_probe_and_bypass():
+    sm = ServiceModel(alpha=1.0)
+    gate = SpecGate(sm, k=2, probe_every=4)
+    assert gate.decide(8) is True           # spec cold: measure it first
+    sm.observe("seg_spec", 8, 0.30)
+    assert gate.decide(8) is False          # plain cold: one plain probe
+    sm.observe("seg_plain", 8, 0.05)
+    sm.observe_acceptance(2, 0.0)           # tokens_per_step == 1.0
+    assert gate.forecast_speedup(8) < 1.0
+    assert gate.decide(8) is False and not gate.speculating(8)
+    sm.observe("seg_plain", 8, 0.90)        # plain got expensive: flip back
+    assert gate.speculating(8)
+    assert gate.decide(8) is True
+    # steady state re-probes the losing mode every probe_every segments
+    # (two bypass decisions above already advanced the cadence counter)
+    decisions = [gate.decide(8) for _ in range(4)]
+    assert decisions == [True, False, True, True]
+    s = gate.stats([8])
+    assert s["probes"] == 2 and s["bypassed_segments"] >= 3
+    assert s["buckets"][8]["mode"] == "spec"
+
+
+def test_server_spec_auto_bypass_stays_bit_identical(model, reference):
+    """Poisoned forecast (spec segments look 10^4x slower than plain): the
+    gate runs plain segments, drafting is bypassed, and every stream still
+    equals one-shot generate — the mode flag moves cost, never bits."""
+    cfg, api, params = model
+    prompts = prompts_for(cfg, 61, 3)
+    with InferenceServer(cfg, api, params, groups=[DeviceGroup("gate")],
+                         scheduler=Static(), buckets=(PLEN,), max_batch=3,
+                         seg_len=2, max_new_cap=12, max_wait_ms=5.0,
+                         draft=DraftSpec(cfg, params, k=2,
+                                         auto_bypass=True)) as srv:
+        srv.admission.model.observe("seg_spec", PLEN, 100.0)
+        srv.admission.model.observe("seg_plain", PLEN, 1e-4)
+        handles = [srv.submit(p, 6) for p in prompts]
+        results = [h.result(timeout=300) for h in handles]
+        s = srv.stats()
+    for p, got in zip(prompts, results):
+        np.testing.assert_array_equal(got, reference(p, 6))
+    assert s["completed"] == 3
+    assert s["speculation"]["k"] == 2
+    assert s["speculation"]["bypassed_segments"] >= 1, s["speculation"]
+
+
+# ------------------------------------------------- O(rows) patch accounting
+def test_patch_cached_exact_transfer_accounting():
+    """patch_cached rewrites rows of the device-resident mirror for exactly
+    one counted transfer — the O(blocks) migration primitive — and refuses
+    when no full-range stash exists (caller falls back to invalidate)."""
+    g = DeviceGroup("patch")
+    x = np.arange(12, dtype=np.float32).reshape(4, 3)
+    prog = (Program().in_(x).out(np.zeros((4, 3), np.float32))
+            .kernel(lambda o, a: a).work_items(4, 1))
+    ver = buffer_version(x)
+    g.stash_output(prog, x, 0, 4, jax.device_put(jnp.asarray(x)), ver)
+    t0 = g.n_transfers
+    x[2] = [9.0, 9.0, 9.0]  # host mirror first; device patch follows
+    assert g.patch_cached(prog, x, [2], x[2:3])
+    assert g.n_transfers == t0 + 1  # exactly one O(rows) upload
+    base = g._xfer_cache[(id(x), ver, 0, 4, 0)]
+    np.testing.assert_array_equal(np.asarray(base), x)
+    y = np.zeros((4, 3), np.float32)
+    prog2 = (Program().in_(y).out(np.zeros((4, 3), np.float32))
+             .kernel(lambda o, a: a).work_items(4, 1))
+    assert not g.patch_cached(prog2, y, [0], y[:1])  # nothing stashed
+    assert g.n_transfers == t0 + 1
+
+
+# --------------------------------------------- forced-migration bit identity
+@pytest.mark.parametrize("mode", ["plain", "spec", "chunked"])
+@pytest.mark.parametrize("paged", [False, True], ids=["contiguous", "paged"])
+def test_forced_migration_sweep_bit_identical(model, reference, paged, mode):
+    """Two co-executed groups with a migration forced at every coordinated
+    segment boundary: slots hop between groups (block handoff under paged,
+    row handoff under contiguous) across plain, speculative and chunked
+    decode — every stream equals its one-shot reference."""
+    cfg, api, params = model
+    policy = ForceMigrate()
+    tag = f"{mode}-{'p' if paged else 'c'}"
+    groups = [DeviceGroup(f"mga-{tag}"), DeviceGroup(f"mgb-{tag}")]
+    kw = {}
+    if mode == "spec":
+        kw["draft"] = DraftSpec(cfg, params, k=2)
+    if mode == "chunked":
+        kw["chunk_len"] = 4
+    prompts = prompts_for(cfg, 71, 6)
+    gens = [8, 5, 8, 6, 8, 5]
+    with InferenceServer(cfg, api, params, groups=groups,
+                         scheduler=Static(), group_batches=True,
+                         migration=policy, buckets=(PLEN,), max_batch=4,
+                         seg_len=2, max_new_cap=14, max_wait_ms=5.0,
+                         paged=PagedSpec(block_len=4) if paged else None,
+                         **kw) as srv:
+        handles = [srv.submit(p, n) for p, n in zip(prompts, gens)]
+        results = [h.result(timeout=600) for h in handles]
+        s = srv.stats()
+    for p, n, got in zip(prompts, gens, results):
+        np.testing.assert_array_equal(got, reference(p, n))
+    assert s["completed"] == 6
+    assert s["slot_migrations"] >= 1, s
+    assert policy.moves_planned >= 1
+
+
+def test_migration_transfers_scale_with_moves_not_segments(model, reference):
+    """Migrations pay O(rows + blocks) through patch_cached, never a
+    per-segment or full-cache re-upload: total transfers stay bounded by
+    prefill waves + migrations while decode runs many more segments."""
+    cfg, api, params = model
+    policy = ForceMigrate()
+    ga, gb = DeviceGroup("xfa"), DeviceGroup("xfb")
+    prompts = prompts_for(cfg, 81, 4)
+    gens = [10, 3, 10, 3]  # short streams free the slots migrations need
+    with InferenceServer(cfg, api, params, groups=[ga, gb],
+                         scheduler=Static(), group_batches=True,
+                         migration=policy, buckets=(PLEN,), max_batch=4,
+                         seg_len=2, max_new_cap=12, max_wait_ms=5.0,
+                         paged=PagedSpec(block_len=4)) as srv:
+        handles = [srv.submit(p, n) for p, n in zip(prompts, gens)]
+        for p, n, h in zip(prompts, gens, handles):
+            np.testing.assert_array_equal(h.result(timeout=600),
+                                          reference(p, n))
+        s = srv.stats()
+        n_leaves = len(srv.kernels.bax_leaves)
+    migs = s["slot_migrations"]
+    assert migs >= 1, s
+    # decode really was multi-segment far beyond the join/migration events
+    assert s["segments"] > s["prefill_waves"] + migs, s
+    # per wave: prompt upload + segment-input re-upload; per migration: at
+    # most one patch per control row / pool leaf / table, or one fallback
+    # re-upload of the inputs.  Nothing scales with segment count.
+    n_ins = 3 + n_leaves  # tok, pos, table, pool leaves
+    budget = (s["prefill_waves"] + migs + 1) * (1 + 2 * n_ins)
+    total = ga.n_transfers + gb.n_transfers
+    assert total <= budget, (total, budget, s)
+
+
+# ------------------------------------------------------------ elastic serve
+def test_elastic_drain_and_join_on_live_server(model, reference):
+    """Mid-replay scale-down then scale-up through ElasticServeGroups: the
+    drained group's slots migrate to survivors (results bit-identical), the
+    last active group refuses to drain, and a freshly joined group serves
+    new requests on the same live server."""
+    cfg, api, params = model
+    groups = [DeviceGroup("ela"), DeviceGroup("elb")]
+    prompts = prompts_for(cfg, 91, 6)
+    gens = [10, 4, 10, 4, 10, 4]
+    with InferenceServer(cfg, api, params, groups=groups,
+                         scheduler=HGuided(), group_batches=True,
+                         buckets=(PLEN,), max_batch=4, seg_len=2,
+                         max_new_cap=12, max_wait_ms=5.0,
+                         paged=PagedSpec(block_len=4)) as srv:
+        ctl = ElasticServeGroups(srv)
+        handles = [srv.submit(p, n) for p, n in zip(prompts, gens)]
+        deadline = time.monotonic() + 120
+        while srv.stats()["segments"] < 1:
+            assert time.monotonic() < deadline, "decode never started"
+            time.sleep(0.005)
+        ctl.drain("elb")
+        assert "elb" in srv.stats()["placement"]["draining"]
+        with pytest.raises(ValueError, match="only active group"):
+            ctl.drain("ela")
+        with pytest.raises(ValueError, match="unknown group"):
+            ctl.drain("nope")
+        for p, n, h in zip(prompts, gens, handles):
+            np.testing.assert_array_equal(h.result(timeout=600),
+                                          reference(p, n))
+        # scale back up: a new group joins the live runtime and serves
+        ctl.join(DeviceGroup("elc"))
+        assert "elc" in srv.stats()["placement"]["member_slots"]
+        h2 = [srv.submit(p, 4) for p in prompts[:4]]
+        for p, h in zip(prompts, h2):
+            np.testing.assert_array_equal(h.result(timeout=600),
+                                          reference(p, 4))
+        s = srv.stats()
+    assert s["completed"] == 10

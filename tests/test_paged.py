@@ -189,12 +189,17 @@ def test_oversize_request_rejected_at_submit(model):
 
 def test_paged_config_validation(model):
     cfg, api, params = model
-    with pytest.raises(ValueError, match="one DeviceGroup"):
+    # Multi-group paged serving requires per-group pools: slot-splitting a
+    # single pool (group_batches=False) names the missing capability.
+    with pytest.raises(ValueError, match="per-group block pools"):
         InferenceServer(cfg, api, params, paged=PagedSpec(),
-                        groups=[DeviceGroup("a"), DeviceGroup("b")])
-    with pytest.raises(ValueError, match="Static"):
-        InferenceServer(cfg, api, params, paged=PagedSpec(),
-                        scheduler=Dynamic(2))
+                        groups=[DeviceGroup("a"), DeviceGroup("b")],
+                        group_batches=False)
+    # An adaptive scheduler + paged pool is legal now (placement follows
+    # observed rates); it must construct and shut down cleanly.
+    srv = InferenceServer(cfg, api, params, paged=PagedSpec(),
+                          scheduler=Dynamic(2), buckets=(PLEN,))
+    srv.close()
     kcfg = dataclasses.replace(cfg, kernel_impl="pallas_interpret")
     with pytest.raises(ValueError, match="decode_block"):
         InferenceServer(kcfg, api, params, paged=PagedSpec(block_len=4))
