@@ -49,11 +49,17 @@ def row(label: str, r: dict, base: dict | None = None) -> str:
 
 
 def trace_report(path: str) -> None:
-    """Markdown span-phase summary of a Chrome trace-event JSON."""
+    """Markdown summary of a Chrome trace-event JSON: span phases, counter
+    tracks (per-group utilization/occupancy series the observability layer
+    emits as ``ph: C`` events), and scheduler decision instants — the
+    non-span events a span-only report would silently drop."""
+    from collections import Counter, defaultdict
+
     from repro.core.trace import phase_totals
 
     doc = json.loads(Path(path).read_text())
-    totals = phase_totals(doc.get("traceEvents", []))
+    events = doc.get("traceEvents", [])
+    totals = phase_totals(events)
     print(f"### span phases — {path}\n")
     print("| phase | spans | total (ms) | mean (µs) |")
     print("|---|---|---|---|")
@@ -61,6 +67,43 @@ def trace_report(path: str) -> None:
         mean_us = d["seconds"] / d["count"] * 1e6 if d["count"] else 0.0
         print(f"| {name} | {d['count']} | {d['seconds'] * 1e3:.2f} "
               f"| {mean_us:.1f} |")
+
+    # Counter tracks: each ph=C event carries {series: value} args — one
+    # row per (counter, series), e.g. per-group occupancy and tokens/s.
+    series: dict = defaultdict(list)
+    for e in events:
+        if e.get("ph") != "C":
+            continue
+        for k, v in (e.get("args") or {}).items():
+            series[(e.get("name", "?"), k)].append(float(v))
+    if series:
+        print("\n### counter tracks\n")
+        print("| counter | series | samples | last | mean | max |")
+        print("|---|---|---|---|---|---|")
+        for (name, k), vals in sorted(series.items()):
+            print(f"| {name} | {k} | {len(vals)} | {vals[-1]:.3g} "
+                  f"| {sum(vals) / len(vals):.3g} | {max(vals):.3g} |")
+
+    # Scheduler decision instants: the audit journal mirrors each record
+    # as an instant named "decision" with the record in args.
+    decisions = [e for e in events
+                 if e.get("ph") == "i" and e.get("name") == "decision"]
+    if decisions:
+        kinds = Counter((e.get("args") or {}).get("kind", "?")
+                        for e in decisions)
+        print("\n### scheduler decisions\n")
+        print("| kind | count |")
+        print("|---|---|")
+        for kind, n in sorted(kinds.items(), key=lambda kv: -kv[1]):
+            print(f"| {kind} | {n} |")
+        moves = [e["args"] for e in decisions
+                 if (e.get("args") or {}).get("kind") == "migration"
+                 and e["args"].get("outcome") == "moved"]
+        if moves:
+            routes = Counter(f"{m.get('src', '?')} -> {m.get('dst', '?')}"
+                             for m in moves)
+            print("\nmigrations: "
+                  + ", ".join(f"{r} x{n}" for r, n in sorted(routes.items())))
 
 
 def main() -> None:

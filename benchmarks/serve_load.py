@@ -136,27 +136,38 @@ def _one_rate(cfg, api, params, *, rate: float, n_requests: int, plen: int,
 
 def _mg_pass(cfg, api, params, *, kernels, groups, scheduler, n_requests,
              plen, gen, seg_len, max_batch, seed,
-             group_batches=None) -> dict:
+             group_batches=None, live_eff: bool = False) -> dict:
     """One multi-group pass: burst-submit ``n_requests`` and measure
     delivered tokens/s over the makespan.  Device speeds are simulated
     (``sim_time_per_wi``) so the cell measures *scheduling* — concurrent
-    member execution and rate-aware placement — not CPU jit noise."""
+    member execution and rate-aware placement — not CPU jit noise.
+
+    ``live_eff`` additionally runs the pass under continuous efficiency
+    accounting (``EngineObs``) and samples the live co-execution
+    efficiency snapshot right before teardown — the number the
+    live-vs-offline agreement gate compares against the cross-pass
+    offline efficiency."""
     from repro.core import Static  # noqa: F401  (callers pass scheduler)
+    from repro.core.obs import EngineObs
     from repro.serve import InferenceServer, PagedSpec
 
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab, plen).astype(np.int32)
                for _ in range(n_requests)]
+    obs = EngineObs(enabled=True) if live_eff else None
     t0 = time.perf_counter()
+    live = None
     with InferenceServer(cfg, api, params, groups=groups, scheduler=scheduler,
                          buckets=(plen,), max_batch=max_batch,
                          seg_len=seg_len, max_new_cap=gen, max_wait_ms=2.0,
                          kernels=kernels, paged=PagedSpec(block_len=4),
-                         group_batches=group_batches) as srv:
+                         group_batches=group_batches, obs=obs) as srv:
         handles = [srv.submit(p, gen) for p in prompts]
         for h in handles:
             h.wait(timeout=600)
         s = srv.stats()
+        if live_eff:
+            live = srv.metrics()["efficiency"]
     wall = time.perf_counter() - t0
     return {
         "groups": [g.name for g in groups],
@@ -164,6 +175,7 @@ def _mg_pass(cfg, api, params, *, kernels, groups, scheduler, n_requests,
         "wall_s": wall,
         "completed": s["completed"],
         "slot_migrations": s.get("slot_migrations", 0),
+        "live_efficiency": live,
     }
 
 
@@ -227,7 +239,7 @@ def multigroup_scaling(*, arch: str = "qwen1.5-4b", n_requests: int = 16,
                    scheduler=Static(), **common)
     together = _mg_pass(cfg, api, params,
                         groups=pair("skew", spw, skew * spw, 3.0, 1.0),
-                        scheduler=HGuided(), **common)
+                        scheduler=HGuided(), live_eff=True, **common)
     fast = _mg_pass(cfg, api, params, groups=one_group("fast", spw, 3.0),
                     scheduler=Static(), **common)
     slow = _mg_pass(cfg, api, params,
@@ -235,6 +247,13 @@ def multigroup_scaling(*, arch: str = "qwen1.5-4b", n_requests: int = 16,
                     scheduler=Static(), **common)
     eff = together["tokens_per_s"] / max(
         1e-9, fast["tokens_per_s"] + slow["tokens_per_s"])
+    # Live-vs-offline agreement: the continuous accounting's in-flight
+    # efficiency (sampled during the together pass) against the offline
+    # cross-pass ratio above.  Both normalize away overheads common to all
+    # members (DESIGN.md §15), so they should agree within the 5% CI gate.
+    live = (together.get("live_efficiency") or {}).get("efficiency")
+    live_err = (abs(live - eff) / eff if live is not None and eff > 0
+                else None)
     return {
         "config": {"n_requests": n_requests, "prompt_len": plen, "gen": gen,
                    "seg_len": seg_len, "max_batch": max_batch,
@@ -251,6 +270,9 @@ def multigroup_scaling(*, arch: str = "qwen1.5-4b", n_requests: int = 16,
             "fast_alone_tokens_per_s": fast["tokens_per_s"],
             "slow_alone_tokens_per_s": slow["tokens_per_s"],
             "efficiency": eff,
+            "live_efficiency": live,
+            "live_vs_offline_err": live_err,
+            "live_snapshot": together.get("live_efficiency"),
             "slot_migrations": together["slot_migrations"],
         },
     }
@@ -334,12 +356,32 @@ def run(*, arch: str = "qwen1.5-4b", n_requests: int = 24, plen: int = 8,
         tps_on = _best_tps()
     finally:
         set_tracer(Tracer(enabled=False))
+    # Disabled-path microbench: the per-site cost of the two hot-path
+    # observability checks when everything is off — one global lookup plus
+    # one attribute read each (``tracer().enabled`` for spans,
+    # ``bus().active`` for the efficiency meter).  Best-of-reps ns/site;
+    # the disabled-path test asserts these stay in the tens of ns and
+    # allocate nothing.
+    import timeit
+
+    from repro.core.obs import bus as _bus
+    from repro.core.trace import tracer as _tracer
+
+    def _site_ns(stmt, glb, n=200_000, reps=5):
+        return min(timeit.timeit(stmt, globals=glb, number=n)
+                   for _ in range(reps)) / n * 1e9
+
+    site_tracer_ns = _site_ns("tr = tracer()\nif tr.enabled: pass",
+                              {"tracer": _tracer})
+    site_obs_ns = _site_ns("b = bus()\nif b.active: pass", {"bus": _bus})
     tracing_overhead = {
         "rate_rps": rates[-1],
         "reps": 3,
         "throughput_off": tps_off,
         "throughput_on": tps_on,
         "overhead_pct": 100.0 * (1.0 - tps_on / max(1e-9, tps_off)),
+        "disabled_site_ns_tracer": site_tracer_ns,
+        "disabled_site_ns_obs": site_obs_ns,
     }
     # Mixed long/short-prompt sweep + the chunked-vs-whole cell: a burst of
     # long-context prompts (256×plen) with short interactive traffic

@@ -6,7 +6,19 @@ base, GroupExecutor.
 """
 from repro.core.device import DeviceGroup  # noqa: F401
 from repro.core.engine import DeviceMask, EngineCL, discover  # noqa: F401
-from repro.core.introspector import Introspector, coexec_metrics  # noqa: F401
+from repro.core.introspector import (  # noqa: F401
+    Introspector,
+    coexec_metrics,
+    live_efficiency,
+)
+from repro.core.obs import (  # noqa: F401
+    DecisionJournal,
+    EngineObs,
+    FlightRecorder,
+    UtilizationMeter,
+    validate_bundle,
+)
+from repro.core.obs import bus as obs_bus  # noqa: F401
 from repro.core.program import Program  # noqa: F401
 from repro.core.runtime import (  # noqa: F401
     GroupExecutor,

@@ -159,3 +159,75 @@ def coexec_metrics(device_times: Dict[str, float], coexec_time: float) -> dict:
         "s_max": s_max,
         "efficiency": s_real / s_max if s_max > 0 else 0.0,
     }
+
+
+def live_efficiency(util: Dict[str, dict]) -> dict:
+    """The paper's load-balancing efficiency from *live* serving signals.
+
+    ``util`` maps each co-executing member to a dict with at least
+    ``busy_fraction`` (rolling-window busy time / window) and one speed
+    signal — ``capacity_rate`` (observed tokens/s at full occupancy,
+    preferred) falling back to ``work_rate`` (work items per busy second).
+    Optional ``watts`` (rated board power, 0 = unrated) refines the
+    straggler attribution.
+
+    Offline, efficiency is ``S_real / S_max``: achieved speedup over the
+    best achievable given each device's standalone speed.  Live, the same
+    quantity is the capacity-weighted utilization —
+
+        efficiency = sum_i(c_i * u_i) / sum_i(c_i)
+
+    — i.e. actual aggregate work rate over the rate the ensemble would
+    sustain with every member fully busy.  Each member's standalone run
+    delivers ~``c_i`` (a saturated standalone group is busy nearly all
+    the time), while co-executed it delivers ``c_i * u_i`` — so this
+    ratio tracks the offline ``together / (sum of alone)`` measurement
+    directly, idle time and all (the BENCH_serve multigroup cell gates
+    their agreement at 5%).  When co-execution is perfect every member
+    stays saturated and efficiency is ~1; a lagging member drags it down
+    by its capacity share times its idleness.  ``balance`` is the
+    paper's T_FD/T_LD analog (min/max busy fraction).
+
+    The straggler attribution answers *why* the laggard lags: ``rate``
+    (it is simply the slowest member — its observed work rate is the
+    minimum), ``watts`` (perf-per-watt placement deliberately starves the
+    highest-rated board), or ``placement`` (speed does not explain it —
+    the scheduler underfed it).  Returns None fields (never NaN) when
+    fewer than one member has data."""
+    members = {}
+    for name, d in util.items():
+        u = d.get("busy_fraction")
+        c = d.get("capacity_rate") or d.get("work_rate")
+        if u is None or c is None or c <= 0:
+            continue
+        members[name] = (float(u), float(c), float(d.get("watts") or 0.0))
+    out = {"efficiency": None, "balance": None, "straggler": None,
+           "members": sorted(members)}
+    if not members:
+        return out
+    us = {n: u for n, (u, _, _) in members.items()}
+    u_max = max(us.values())
+    if u_max <= 0:
+        return out
+    total_c = sum(c for _, c, _ in members.values())
+    out["efficiency"] = (sum(u * c for u, c, _ in members.values())
+                         / total_c)
+    out["balance"] = min(us.values()) / u_max
+    if len(members) > 1:
+        lag = min(us, key=us.get)
+        u, c, w = members[lag]
+        # Attribution only when the lag is material (>5% behind the lead).
+        if u < 0.95 * u_max:
+            if c <= min(cc for _, cc, _ in members.values()):
+                reason = "rate"
+            elif w and w >= max(ww for _, _, ww in members.values()):
+                reason = "watts"
+            else:
+                reason = "placement"
+            out["straggler"] = {
+                "member": lag, "reason": reason,
+                "busy_fraction": u, "lead_busy_fraction": u_max,
+                "capacity_share": c / total_c if total_c > 0 else None,
+                "watts": w or None,
+            }
+    return out

@@ -40,20 +40,27 @@ import jax
 
 from repro.core.device import DeviceGroup
 from repro.core.introspector import Introspector, PackageRecord
+from repro.core.obs import bus as obs_bus
 from repro.core.program import Program, buffer_version, bump_version
 from repro.core.scheduler.base import Scheduler
 from repro.core.trace import tracer
 
 
 def _trace_execute(rec: PackageRecord) -> None:
-    """Introspector streaming sink → span tracer: every package record
-    becomes a complete "execute" span on its device group's track (the
-    record's perf_counter timestamps are already in the tracer's clock)."""
+    """Introspector streaming sink → span tracer + observability bus:
+    every package record becomes a complete "execute" span on its device
+    group's track (the record's perf_counter timestamps are already in the
+    tracer's clock) and a busy interval in any attached utilization meter
+    — one measurement, two consumers, so traces and live efficiency can
+    never disagree.  Both checks cost one attribute read when off."""
     tr = tracer()
     if tr.enabled:
         tr.complete("execute", rec.t_enqueue, rec.t_end,
                     track=f"group/{rec.device}",
                     offset=rec.offset_wi, size=rec.size_wi)
+    b = obs_bus()
+    if b.active:
+        b.record(rec)
 
 
 class RunError(RuntimeError):

@@ -162,6 +162,16 @@ class Tracer:
             self._emit("i", name, track or _thread_track(), None,
                        self._clock(), None, args)
 
+    def counter(self, name: str, track: Optional[str] = None,
+                **values) -> None:
+        """A counter sample ("C" phase): each kwarg is one series of the
+        named counter track.  Perfetto/chrome://tracing render successive
+        samples as a stacked load curve interleaved with the spans —
+        occupancy, blocks in use, tokens/s, efficiency ride these."""
+        if self._enabled:
+            self._emit("C", name, track or "counters", None,
+                       self._clock(), None, values)
+
     def complete(self, name: str, t0: float, t1: float,
                  track: Optional[str] = None, **args) -> None:
         """A span whose interval the caller measured (``now()`` clock)."""
@@ -365,6 +375,14 @@ def validate_chrome(doc) -> List[str]:
             dur = e.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errs.append(f"event {i}: X missing/negative dur {dur!r}")
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                errs.append(f"event {i}: counter without series args")
+            elif any(not isinstance(v, (int, float)) or isinstance(v, bool)
+                     for v in args.values()):
+                errs.append(f"event {i}: counter series must be numeric: "
+                            f"{args!r}")
         elif ph in ("b", "n", "e"):
             if "id" not in e:
                 errs.append(f"event {i}: async {ph!r} missing id")

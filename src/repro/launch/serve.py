@@ -145,7 +145,8 @@ def _metrics_pump(server, stop: threading.Event, every: float) -> None:
 
 def run_server(cfg, api, params, args) -> None:
     """Replay a seeded Poisson arrival trace through ``InferenceServer``."""
-    from repro.serve import PagedSpec
+    from repro.core.obs import EngineObs
+    from repro.serve import ObsHTTP, PagedSpec
 
     rng = np.random.default_rng(args.seed + 2)
     prompts = [
@@ -155,6 +156,8 @@ def run_server(cfg, api, params, args) -> None:
     gaps = rng.exponential(1.0 / args.rate, args.requests)
     paged = PagedSpec(block_len=args.block_len) if args.paged else None
     groups = _serve_groups(args)
+    obs = EngineObs(enabled=args.http_port >= 0 or tracer().enabled,
+                    crash_dir=args.crash_dir)
     server = InferenceServer(
         cfg, api, params,
         groups=groups,
@@ -170,8 +173,14 @@ def run_server(cfg, api, params, args) -> None:
         # --groups opts into per-group batches even for contiguous KV;
         # legacy --coexec keeps the slot-splitting regime (None = auto).
         group_batches=True if args.groups > 1 else None,
+        obs=obs,
     )
     deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    http = None
+    if args.http_port >= 0:
+        http = ObsHTTP(server, port=args.http_port)
+        print(f"[obs-http] serving /metrics /healthz /stats on "
+              f"{http.url()}", flush=True)
     stop = threading.Event()
     pump = None
     if args.metrics_every > 0:
@@ -181,23 +190,35 @@ def run_server(cfg, api, params, args) -> None:
         pump.start()
     t0 = time.perf_counter()
     drained = None
-    with server:
-        handles = []
-        for i, (p, gap) in enumerate(zip(prompts, gaps)):
-            time.sleep(gap)
-            handles.append(server.submit(p, args.gen, deadline_s=deadline))
-            if (args.drain_after and i + 1 == args.drain_after
-                    and server.group_batches and len(groups) > 1):
-                drained = groups[-1].name
-                server.drain_group(drained)
-        results = []
-        for h in handles:
-            # Wait for the *final* state before reading `rejected`: a
-            # request may pass submit-time admission and still be rejected
-            # later, at boarding time, once queue wait has eaten its budget.
-            h.wait(timeout=600)
-            results.append(None if h.rejected else h.result(timeout=600))
-    wall = time.perf_counter() - t0
+    try:
+        with server:
+            handles = []
+            for i, (p, gap) in enumerate(zip(prompts, gaps)):
+                time.sleep(gap)
+                handles.append(server.submit(p, args.gen, deadline_s=deadline))
+                if (args.drain_after and i + 1 == args.drain_after
+                        and server.group_batches and len(groups) > 1):
+                    drained = groups[-1].name
+                    server.drain_group(drained)
+            results = []
+            for h in handles:
+                # Wait for the *final* state before reading `rejected`: a
+                # request may pass submit-time admission and still be
+                # rejected later, at boarding time, once queue wait has
+                # eaten its budget.
+                h.wait(timeout=600)
+                results.append(None if h.rejected else h.result(timeout=600))
+            wall = time.perf_counter() - t0
+            if http is not None and args.http_hold_s > 0:
+                # Keep the live server (and its endpoints) up so an
+                # external scraper — the CI smoke's curl — can probe a
+                # healthy engine, not a closed one.
+                print(f"[obs-http] holding {args.http_hold_s:.0f}s for "
+                      "scrapes", flush=True)
+                time.sleep(args.http_hold_s)
+    finally:
+        if http is not None:
+            http.close()
     if pump is not None:
         stop.set()
         pump.join(timeout=5)
@@ -312,6 +333,21 @@ def main() -> None:
                     help="write a Chrome trace-event JSON of the run "
                          "(load in Perfetto / chrome://tracing); covers "
                          "every mode — server, co-exec, one-shot")
+    ap.add_argument("--http-port", type=int, default=-1,
+                    help="server mode: serve live /metrics (Prometheus), "
+                         "/healthz (liveness + per-group readiness), and "
+                         "/stats (JSON) on 127.0.0.1:PORT for the run's "
+                         "duration (0 = ephemeral port, -1 = off).  Also "
+                         "enables continuous efficiency accounting and the "
+                         "scheduler decision journal")
+    ap.add_argument("--http-hold-s", type=float, default=0.0,
+                    help="server mode with --http-port: keep the live "
+                         "server and endpoints up this many seconds after "
+                         "the replay drains, so external scrapers can probe "
+                         "a healthy engine")
+    ap.add_argument("--crash-dir", default="crashes",
+                    help="directory for flight-recorder post-mortem "
+                         "bundles (written on engine failure)")
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="server mode: print rolling telemetry (completed, "
                          "TTFT/ITL quantiles) every N seconds, plus the "

@@ -35,10 +35,12 @@ from repro.serve.server import (  # noqa: F401
     validate_chunked,
     validate_draft,
 )
+from repro.serve.http import ObsHTTP  # noqa: F401
 from repro.serve.telemetry import (  # noqa: F401
     Ema,
     RollingStat,
     Telemetry,
+    parse_exposition,
     quantile,
 )
 from repro.serve.step import (  # noqa: F401

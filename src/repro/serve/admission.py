@@ -259,6 +259,8 @@ class SpecGate:
         self._probes = 0
         self._bypassed = 0
         self._speculated = 0
+        self._mode: Dict[int, bool] = {}  # bucket -> last decision
+        self.journal = None  # DecisionJournal, wired by the server when obs is on
 
     def forecast_speedup(self, bucket: int) -> Optional[float]:
         spec = self.model.estimate("seg_spec", bucket)
@@ -293,7 +295,16 @@ class SpecGate:
                 self._speculated += 1
             else:
                 self._bypassed += 1
-            return speculate
+            prev = self._mode.get(bucket)
+            self._mode[bucket] = speculate
+            journal = self.journal
+        if journal is not None and prev is not None and prev != speculate:
+            su = (self.model.tokens_per_step(self.k) * plain / spec
+                  if spec and plain else None)
+            journal.record("spec_gate", bucket=bucket,
+                           mode="spec" if speculate else "plain",
+                           probe=probe, forecast_speedup=su)
+        return speculate
 
     def speculating(self, bucket: int) -> bool:
         """Forecast-only view (no probe accounting): is drafting currently

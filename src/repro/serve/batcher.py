@@ -1173,7 +1173,7 @@ class BatchGroup:
         cnt = self.prog._outs[1] if self.spec_k else None
         n_active = 0
         finished = []
-        emitted = drafted = accepted = chunk_tokens = 0
+        emitted = drafted = accepted = chunk_tokens = delivered = 0
         tr = tracer()
         traced = tr.enabled
         for slot, req in self.active():
@@ -1194,6 +1194,7 @@ class BatchGroup:
                 if req.chunk_pos >= self.bucket:
                     ctok = self.prog._outs[self._ctok_out]
                     req.board(slot, int(ctok[slot, 0]))
+                    delivered += 1
                     if traced:
                         tr.async_instant("first_token", req.seq, slot=slot)
                     self.tokens_written += min(self.bucket, self.max_seq)
@@ -1230,6 +1231,7 @@ class BatchGroup:
                     tr.async_instant("decode_segment", req.seq, slot=slot,
                                      tokens=int(len(take)))
             req.extend(take)
+            delivered += int(len(take))
             if req.remaining() <= 0:
                 finished.append(req)
                 self.release_slot(slot)
@@ -1242,7 +1244,8 @@ class BatchGroup:
             self._seg_tr0 = 0.0
         if self.telemetry is not None and chunk_tokens:
             self.telemetry.count("chunk_tokens", chunk_tokens)
-        res = {"n_active": n_active, "finished": finished, "seconds": seconds}
+        res = {"n_active": n_active, "finished": finished, "seconds": seconds,
+               "tokens": delivered}
         if self.spec_k:
             res["drafted"], res["accepted"] = drafted, accepted
             res["mode"] = self._seg_mode

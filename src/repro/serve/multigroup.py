@@ -88,7 +88,13 @@ class MigrationPolicy:
     ``plan`` returns ``(moves, hold)``: moves to apply now (each validated
     again by ``migrate_slot_to``), and member names that should *skip*
     submitting their next segment this round — used to coordinate a common
-    boundary.  The base policy never migrates."""
+    boundary.  The base policy never migrates.
+
+    ``last_info`` carries the inputs behind the most recent plan (shares,
+    active counts) so the scheduler decision journal can record *why* a
+    move happened, not just that it did."""
+
+    last_info: Dict[str, object] = {}
 
     def plan(self, members: Dict[str, object],
              weights: Dict[str, float]) -> Tuple[List[Move], Set[str]]:
@@ -115,6 +121,8 @@ class RateBalancer(MigrationPolicy):
         w = [max(0.0, float(weights.get(nm, 1.0))) for nm in names]
         tw = sum(w) or float(len(names))
         share = {nm: total * wi / tw for nm, wi in zip(names, w)}
+        self.last_info = {"shares": {nm: round(share[nm], 3) for nm in names},
+                          "active": dict(active)}
         srcs = sorted(
             (nm for nm in names
              if active[nm] - share[nm] >= 1.0 and members[nm].at_boundary()),

@@ -32,6 +32,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.device import DeviceGroup
+from repro.core.obs import EngineObs
 from repro.core.runtime import Runtime
 from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.static import Static
@@ -298,7 +299,8 @@ class InferenceServer:
                  chunk_len: int = 0,
                  telemetry: Optional[Telemetry] = None,
                  group_batches: Optional[bool] = None,
-                 migration: Optional[MigrationPolicy] = None) -> None:
+                 migration: Optional[MigrationPolicy] = None,
+                 obs: Optional[EngineObs] = None) -> None:
         self.groups = list(groups) if groups else [DeviceGroup("serve:0")]
         self.runtime = Runtime(self.groups)
         self.scheduler = scheduler or Static()
@@ -342,6 +344,15 @@ class InferenceServer:
         # quantiles the point-in-time stats() dict cannot provide).
         self.telemetry = telemetry or Telemetry()
         self.admission.telemetry = self.telemetry
+        # Live observability (DESIGN §15): utilization meter + decision
+        # journal + flight recorder.  Default: the continuous accounting
+        # follows the tracer (a traced run wants load curves; an untraced
+        # one must stay at one-attribute-read-per-site cost); the flight
+        # recorder is always armed — it only runs on failure paths.
+        self.obs = obs if obs is not None else EngineObs(
+            enabled=tracer().enabled)
+        self.obs.attach()
+        self._last_counter_emit = 0.0
         # Speculation auto-bypass (opt-in via DraftSpec.auto_bypass):
         # forecast per-bucket whether drafted segments actually beat plain
         # ones and flip the kernels' gate input accordingly (re-probing
@@ -350,6 +361,8 @@ class InferenceServer:
         self.spec_gate = (SpecGate(self.admission.model, draft.k)
                           if draft is not None and draft.auto_bypass
                           else None)
+        if self.spec_gate is not None and self.obs.enabled:
+            self.spec_gate.journal = self.obs.journal
         # Per-member decode-slot counts are fixed at construction (paged
         # PoolState shapes must stay stable across group re-forms):
         # max_batch total slots split power-proportionally, one minimum.
@@ -468,6 +481,7 @@ class InferenceServer:
         s["transfers"] = {g.name: g.transfer_stats() for g in self.groups}
         s["memory"] = mem
         s["admission"] = self.admission.stats()
+        s["decisions"] = self.obs.journal.snapshot()
         s["chunk_len"] = self.chunk_len
         if self.spec_gate is not None:
             s["speculation"] = self.spec_gate.stats(list(self.buckets.sizes))
@@ -498,6 +512,7 @@ class InferenceServer:
         self._gauge_memory(mem)
         return {
             "memory": mem,
+            "efficiency": self._efficiency_snapshot(),
             "groups": {g.name: g.transfer_stats() for g in self.groups},
             "last_runs": runs,
             "speculation": {
@@ -522,11 +537,78 @@ class InferenceServer:
 
     def prometheus(self, prefix: str = "enginecl") -> str:
         """Prometheus-style text exposition of the streaming telemetry
-        (memory gauges refreshed from the live pools first)."""
+        (memory and efficiency gauges refreshed from the live pools and
+        the utilization meter first)."""
         with self._cv:
             mem = self._memory_fold()
         self._gauge_memory(mem)
+        self._efficiency_snapshot()  # refreshes the coexec_* gauges
         return self.telemetry.prometheus(prefix)
+
+    def _efficiency_snapshot(self) -> dict:
+        """Live utilization/efficiency view (``metrics()["efficiency"]``):
+        per-group busy fractions and token rates from the utilization
+        meter's rolling windows, the scheduler's observed capacity rates
+        as the speed signal, and the paper's load-balancing efficiency +
+        straggler attribution on top.  Also folds the headline numbers
+        into telemetry gauges so ``/metrics`` scrapes see them."""
+        if not self.obs.enabled:
+            return {"enabled": False}
+        model = self.admission.model
+        with self._cv:
+            names = [g.name for g in self.groups]
+            watts = {g.name: g.watts for g in self.groups}
+            draining = set(self._draining)
+        rates = {}
+        for g in names:
+            per = [r for r in (model.rate(b, g) for b in self.buckets.sizes)
+                   if r]
+            rates[g] = sum(per) / len(per) if per else None
+        snap = self.obs.meter.snapshot(names, rates=rates, watts=watts,
+                                       draining=draining)
+        tel = self.telemetry
+        if snap["efficiency"] is not None:
+            tel.gauge("coexec_efficiency", snap["efficiency"])
+        if snap["balance"] is not None:
+            tel.gauge("coexec_balance", snap["balance"])
+        tel.gauge("tokens_delivered_per_s", snap["tokens_per_s"])
+        for g, d in snap["groups"].items():
+            tel.gauge(f"group_busy_fraction_{g}", d["busy_fraction"])
+            tel.gauge(f"group_tokens_per_s_{g}", d["tokens_per_s"])
+        return snap
+
+    def health(self) -> tuple:
+        """Liveness/readiness view for ``/healthz``: ``(status_code,
+        body)``.  200 while the batcher thread is alive, the server is
+        accepting, and at least one group is not draining; 503 once any of
+        those degrade (a draining group itself reports ``ready: False``
+        but does not degrade overall health while others serve)."""
+        alive = self._thread.is_alive()
+        with self._cv:
+            closing = self._closing
+            draining = set(self._draining)
+            queued = sum(len(q) for q in self._pending.values())
+            deferred = self._stats["deferred"]
+            rejected = self._stats["rejected"]
+            mem = self._memory_fold()
+        accepting = alive and not closing
+        groups = {g.name: {"draining": g.name in draining,
+                           "ready": accepting and g.name not in draining}
+                  for g in self.groups}
+        ok = accepting and any(d["ready"] for d in groups.values())
+        body = {
+            "status": "ok" if ok else "degraded",
+            "batcher_alive": alive,
+            "accepting": accepting,
+            "groups": groups,
+            "admission_pressure": {"queued": queued, "deferred": deferred,
+                                   "rejected": rejected},
+        }
+        if mem.get("mode") == "paged":
+            body["pool"] = {k: mem.get(k) for k in
+                            ("blocks_in_use", "blocks_free", "blocks_total")
+                            if k in mem}
+        return (200 if ok else 503), body
 
     # Within one bucket's group lineage (successive groups re-use the same
     # logical pool/capacity), capacity-like keys take the max; across
@@ -609,6 +691,7 @@ class InferenceServer:
             self._cv.notify_all()
         self._thread.join(timeout)
         self.runtime.shutdown()
+        self.obs.detach()
 
     def __enter__(self) -> "InferenceServer":
         return self
@@ -650,6 +733,7 @@ class InferenceServer:
         import traceback
 
         traceback.print_exc()
+        self._postmortem("batcher_crashed", errors=[repr(exc)])
         with self._cv:
             victims: List[_Request] = []
             for q in self._pending.values():
@@ -813,6 +897,8 @@ class InferenceServer:
             self._stats["occupancy_sum"] += res["n_active"]
             self.telemetry.observe("segment_s", res["seconds"])
             self.telemetry.observe("occupancy", res["n_active"])
+            if self.obs.enabled or tracer().enabled:
+                self._note_segment(grp, gname, res)
             drafted = res.get("drafted", 0)
             if drafted:
                 self._stats["tokens_drafted"] += drafted
@@ -834,6 +920,10 @@ class InferenceServer:
                                              res["seconds"])
                 self.telemetry.observe("prefill_s", res["seconds"])
             tr = tracer()
+            if res["failed"]:
+                self._postmortem(
+                    "prefill_failed", bucket=grp.bucket,
+                    errors=res.get("errors", ["prefill failed"]))
             for req in res["failed"]:
                 self._stats["failed"] += 1
                 self.telemetry.count("requests_failed")
@@ -842,6 +932,10 @@ class InferenceServer:
                 req.handle._fail(
                     ServeError("; ".join(res.get("errors", ["prefill failed"])))
                 )
+            if res["joined"] and self.obs.enabled:
+                # First tokens delivered by this member's prefill wave.
+                self.obs.meter.note_tokens(self._meter_key(gname),
+                                           res["joined"])
             if res["joined"]:
                 self._stats["joins"] += res["joined"]
                 if self._stats["segments"]:
@@ -852,6 +946,45 @@ class InferenceServer:
                     self._retire(req)
                     grp.release_slot(slot)
         return True
+
+    def _meter_key(self, gname: Optional[str]) -> str:
+        """Utilization-meter key for a harvested batch: the member's
+        DeviceGroup under group_batches, the lone group's name otherwise,
+        and a pseudo-group for legacy slot-split co-execution (its
+        segments span groups — busy attribution still comes per-device
+        from the Introspector stream)."""
+        if gname is not None:
+            return gname
+        return self.groups[0].name if len(self.groups) == 1 else "_batch"
+
+    def _note_segment(self, grp: BatchGroup, gname: Optional[str],
+                      res: dict) -> None:
+        """Per-harvest observability (cv held): delivered tokens into the
+        meter's rolling window, and counter-track samples — occupancy,
+        tokens/s, blocks in use, efficiency — into the trace, so one
+        ``--trace-out`` file shows spans *and* load curves.  The
+        efficiency sample (a windowed reduction, not a counter read) is
+        rate-limited."""
+        key = self._meter_key(gname)
+        tokens = res.get("tokens", 0)
+        if self.obs.enabled and tokens:
+            self.obs.meter.note_tokens(key, tokens)
+        tr = tracer()
+        if not tr.enabled:
+            return
+        tr.counter("occupancy", **{key: res["n_active"]})
+        if res["seconds"] > 0:
+            tr.counter("tokens_per_s", **{key: tokens / res["seconds"]})
+        blocks = grp.memory_stats().get("blocks_in_use")
+        if blocks is not None:
+            tr.counter("blocks_in_use", **{key: blocks})
+        now = time.monotonic()
+        if self.obs.enabled and now - self._last_counter_emit >= 0.2:
+            self._last_counter_emit = now
+            snap = self._efficiency_snapshot()
+            if snap.get("efficiency") is not None:
+                tr.counter("efficiency", efficiency=snap["efficiency"],
+                           balance=snap["balance"])
 
     # ------------------------------------------------- group_batches regime
     def _make_member(self, bucket: int, g: DeviceGroup):
@@ -900,12 +1033,19 @@ class InferenceServer:
         hold: set = set()
         if len(live) > 1:
             self._drain_migrations(live)
-            moves, hold = self._policy.plan(
-                live, self._member_weights(bucket, live))
+            weights = self._member_weights(bucket, live)
+            moves, hold = self._policy.plan(live, weights)
             for src, slot, dst in moves:
-                if live[src].migrate_slot_to(slot, live[dst]):
+                ok = live[src].migrate_slot_to(slot, live[dst])
+                if ok:
                     self._stats["slot_migrations"] += 1
                     self.telemetry.count("slot_migrations")
+                self.obs.decision(
+                    "migration", bucket=bucket, src=src, slot=slot, dst=dst,
+                    outcome="moved" if ok else "blocked",
+                    reason=type(self._policy).__name__,
+                    weights={k: round(w, 4) for k, w in weights.items()},
+                    **getattr(self._policy, "last_info", {}))
         self._board_members(bucket, live, now, hold)
         for nm, grp in live.items():
             if grp.seg_handle is not None or nm in hold:
@@ -938,6 +1078,9 @@ class InferenceServer:
                     if grp.migrate_slot_to(slot, other):
                         self._stats["slot_migrations"] += 1
                         self.telemetry.count("slot_migrations")
+                        self.obs.decision(
+                            "migration", src=nm, slot=slot, dst=onm,
+                            outcome="moved", reason="drain")
                         break
 
     def _member_weights(self, bucket: int, members: dict) -> dict:
@@ -969,6 +1112,15 @@ class InferenceServer:
         loads = [sum(1 for r in members[g.name].slots if r is not None)
                  for g in devs]
         counts = plan_wave(weights, caps, loads, len(q))
+        if self.obs.enabled and any(counts):
+            self.obs.decision(
+                "placement", bucket=bucket, queue=len(q), reason="plan_wave",
+                weights={g.name: round(w, 4)
+                         for g, w in zip(devs, weights)},
+                rates={g.name: rates[g.name] for g in devs},
+                caps={g.name: c for g, c in zip(devs, caps)},
+                loads={g.name: ld for g, ld in zip(devs, loads)},
+                outcome={g.name: c for g, c in zip(devs, counts)})
         for g, c in zip(devs, counts):
             if c > 0:
                 self._board(members[g.name], now, limit=c)
@@ -985,6 +1137,8 @@ class InferenceServer:
                     "join_group requires group_batches serving")
             if any(g.name == group.name for g in self.groups):
                 self._draining.discard(group.name)
+                self.obs.decision("elastic", action="reactivate",
+                                  group=group.name)
                 self._cv.notify_all()
                 return
             self.runtime.add_group(group)
@@ -993,6 +1147,8 @@ class InferenceServer:
                 self.scheduler.placement_weights(self.groups),
                 self.max_batch, minimum=1)
             self._member_slots[group.name] = shares[len(self.groups) - 1]
+            self.obs.decision("elastic", action="join", group=group.name,
+                              slots=self._member_slots[group.name])
             self._cv.notify_all()
 
     def drain_group(self, name: str) -> None:
@@ -1010,6 +1166,7 @@ class InferenceServer:
             if name in active and len(active) <= 1:
                 raise ValueError("cannot drain the only active group")
             self._draining.add(name)
+            self.obs.decision("elastic", action="drain", group=name)
             self._cv.notify_all()
 
     def _board(self, grp: BatchGroup, now: float,
@@ -1051,6 +1208,11 @@ class InferenceServer:
                     q[0].deferred = True
                     self._stats["deferred"] += 1
                     self.telemetry.count("requests_deferred")
+                    self.obs.decision(
+                        "admission", outcome="deferred", seq=q[0].seq,
+                        bucket=grp.bucket, reason="pool pressure",
+                        need_blocks=grp.reserve_estimate(q[0]),
+                        available=grp.memory_available(reserved))
                     if tr.enabled:
                         tr.async_instant("deferred", q[0].seq,
                                          bucket=grp.bucket)
@@ -1072,6 +1234,9 @@ class InferenceServer:
         """Resolve one request as rejected (stats + telemetry + trace)."""
         self._stats["rejected"] += 1
         self.telemetry.count("requests_rejected")
+        self.obs.decision("admission", outcome="rejected", reject_kind=kind,
+                          seq=req.seq, bucket=req.bucket,
+                          deadline=req.deadline, reason=reason)
         if tr.enabled:
             tr.async_instant("admission", req.seq, admitted=False, kind=kind)
             tr.async_end("request", req.seq, status="rejected", kind=kind)
@@ -1100,6 +1265,8 @@ class InferenceServer:
             tr.async_end("request", req.seq, status="ok", tokens=req.gen)
 
     def _fail_group(self, grp: BatchGroup, errors: Sequence[str]) -> None:
+        self._postmortem("segment_failed", errors=list(errors),
+                         bucket=grp.bucket)
         tr = tracer()
         for req in grp.fail_all(errors):
             self._stats["failed"] += 1
@@ -1107,3 +1274,19 @@ class InferenceServer:
             if tr.enabled:
                 tr.async_end("request", req.seq, status="failed")
             req.handle._fail(ServeError("; ".join(errors)))
+
+    def _postmortem(self, reason: str, *, errors: Sequence[str] = (),
+                    **context) -> None:
+        """Flight-recorder dump on a failure path (RunError surfacing as a
+        failed segment/prefill, poisoned dependents, a dying batcher).
+        Diagnostics must never raise into the failure handling that
+        triggered them, and never block a healthy path — the recorder
+        rate-limits itself."""
+        try:
+            ctx = {"errors": list(errors), **context}
+            self.obs.postmortem(
+                reason, context=ctx, stats=self.stats(),
+                efficiency=self._efficiency_snapshot(),
+                telemetry=self.telemetry.snapshot())
+        except Exception:  # noqa: BLE001
+            pass

@@ -95,6 +95,119 @@ class RollingStat:
 
 
 _NAME_SANITIZE = re.compile(r"[^a-zA-Z0-9_:]")
+_LABEL_SANITIZE = re.compile(r"[^a-zA-Z0-9_]")
+
+# Operator-facing HELP text for well-known streams; anything else gets a
+# generated line (the exposition format requires none, but a scrape UI
+# without HELP is a wall of bare names).
+_HELP = {
+    "ttft_s": "Time to first token, seconds (arrival to first emission)",
+    "itl_s": "Inter-token latency, seconds (decode time per token after "
+             "the first)",
+    "latency_s": "End-to-end request latency, seconds",
+    "queue_wait_s": "Arrival-to-boarding queue wait, seconds",
+    "segment_s": "Decode segment wall time, seconds",
+    "prefill_s": "Prefill wave wall time, seconds",
+    "occupancy": "Active decode slots per harvested segment",
+    "acceptance": "Speculative draft-token acceptance rate per segment",
+    "coexec_efficiency": "Live co-execution load-balancing efficiency "
+                         "(capacity-weighted member utilization, 1.0 = "
+                         "every member fully busy)",
+    "coexec_balance": "min/max member busy fraction over the rolling "
+                      "window (the paper's T_FD/T_LD)",
+    "tokens_delivered_per_s": "Delivered tokens per second over the "
+                              "rolling observability window",
+}
+
+
+def sanitize_metric_name(name: str) -> str:
+    """Exposition-legal metric name: illegal characters replaced, a
+    leading digit prefixed (names must match [a-zA-Z_:][a-zA-Z0-9_:]*)."""
+    name = _NAME_SANITIZE.sub("_", name)
+    return "_" + name if name[:1].isdigit() else (name or "_")
+
+
+def sanitize_label_name(name: str) -> str:
+    """Exposition-legal label name ([a-zA-Z_][a-zA-Z0-9_]*)."""
+    name = _LABEL_SANITIZE.sub("_", name)
+    return "_" + name if name[:1].isdigit() else (name or "_")
+
+
+def escape_label_value(value: str) -> str:
+    return (str(value).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def escape_help(text: str) -> str:
+    return str(text).replace("\\", r"\\").replace("\n", r"\n")
+
+
+_METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\["\\n])*)"')
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})? "
+    r"([-+]?(?:[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?|Inf|NaN))"
+    r"(?: [-+]?[0-9]+)?$")
+_SUFFIXES = ("_sum", "_count", "_total", "_bucket")
+
+
+def parse_exposition(text: str) -> Dict[str, dict]:
+    """Strict Prometheus text-format parser: the conformance check CI's
+    scrape and the telemetry tests share.  Raises ``ValueError`` on any
+    violation (malformed line, sample without a preceding TYPE for its
+    family, duplicate TYPE, bad label syntax, missing trailing newline).
+    Returns ``{family: {"type", "help", "samples": [(name, labels, value)]}}``.
+    """
+    if not text.endswith("\n"):
+        raise ValueError("exposition must end with a newline")
+    families: Dict[str, dict] = {}
+
+    def family_of(name: str) -> str:
+        for suf in _SUFFIXES:
+            if name.endswith(suf) and name[: -len(suf)] in families:
+                return name[: -len(suf)]
+        return name
+
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            if len(parts) < 3 or parts[0] != "#" or parts[1] not in (
+                    "HELP", "TYPE"):
+                raise ValueError(f"line {i}: malformed comment: {line!r}")
+            kind, name = parts[1], parts[2]
+            if not _METRIC_NAME_RE.match(name):
+                raise ValueError(f"line {i}: bad metric name {name!r}")
+            fam = families.setdefault(
+                name, {"type": None, "help": None, "samples": []})
+            if kind == "TYPE":
+                if fam["type"] is not None:
+                    raise ValueError(f"line {i}: duplicate TYPE for {name}")
+                if len(parts) != 4 or parts[3] not in (
+                        "counter", "gauge", "summary", "histogram",
+                        "untyped"):
+                    raise ValueError(f"line {i}: bad TYPE: {line!r}")
+                fam["type"] = parts[3]
+            else:
+                fam["help"] = parts[3] if len(parts) == 4 else ""
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {i}: malformed sample: {line!r}")
+        name, labels_s, value = m.group(1), m.group(2), m.group(3)
+        labels = {}
+        if labels_s:
+            rest = _LABEL_RE.sub("", labels_s).replace(",", "").strip()
+            if rest:
+                raise ValueError(f"line {i}: bad labels {labels_s!r}")
+            labels = dict(_LABEL_RE.findall(labels_s))
+        fam = family_of(name)
+        if fam not in families or families[fam]["type"] is None:
+            raise ValueError(f"line {i}: sample {name!r} precedes its TYPE")
+        families[fam]["samples"].append((name, labels, float(value)))
+    return families
 
 
 class Telemetry:
@@ -133,6 +246,8 @@ class Telemetry:
             v = float(value)
         except (TypeError, ValueError):
             return
+        if not math.isfinite(v):
+            return  # a NaN gauge would poison the exposition
         with self._lock:
             self._gauges[name] = v
 
@@ -163,15 +278,23 @@ class Telemetry:
     def prometheus(self, prefix: str = "enginecl") -> str:
         """Prometheus text exposition: each observation stream as a summary
         (rolling-window quantiles + lifetime _sum/_count), counters as
-        ``_total`` counters, gauges as gauges."""
+        ``_total`` counters, gauges as gauges.  Conforms to the text
+        exposition format — ``# HELP``/``# TYPE`` per family, sanitized
+        metric/label names — and round-trips through the strict
+        :func:`parse_exposition` checker."""
         snap = self.snapshot()
 
         def nm(name: str) -> str:
-            return _NAME_SANITIZE.sub("_", f"{prefix}_{name}")
+            return sanitize_metric_name(f"{prefix}_{name}")
+
+        def help_for(key: str, kind: str) -> str:
+            return escape_help(_HELP.get(key, f"{kind} {key} from the "
+                                              "serving telemetry"))
 
         lines = []
         for k, st in snap["observations"].items():
             base = nm(k)
+            lines.append(f"# HELP {base} {help_for(k, 'observation stream')}")
             lines.append(f"# TYPE {base} summary")
             for q in (0.5, 0.95, 0.99):
                 v = st[f"p{int(q * 100)}"]
@@ -181,10 +304,12 @@ class Telemetry:
             lines.append(f"{base}_count {st['count']}")
         for k, v in snap["counters"].items():
             base = nm(k if k.endswith("_total") else k + "_total")
+            lines.append(f"# HELP {base} {help_for(k, 'counter')}")
             lines.append(f"# TYPE {base} counter")
             lines.append(f"{base} {v:.9g}")
         for k, v in snap["gauges"].items():
             base = nm(k)
+            lines.append(f"# HELP {base} {help_for(k, 'gauge')}")
             lines.append(f"# TYPE {base} gauge")
             lines.append(f"{base} {v:.9g}")
         return "\n".join(lines) + "\n"

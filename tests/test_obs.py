@@ -1,0 +1,459 @@
+"""Live observability layer: utilization/efficiency accounting, scheduler
+decision journal, flight-recorder post-mortems, counter tracks, strict
+Prometheus exposition, the HTTP endpoints, and the disabled-path
+zero-overhead contract."""
+import json
+import time
+import tracemalloc
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import DeviceGroup, HGuided
+from repro.core.introspector import live_efficiency
+from repro.core.obs import (
+    DecisionJournal,
+    EngineObs,
+    UtilizationMeter,
+    bus,
+    jsonable,
+    validate_bundle,
+)
+from repro.core.trace import Tracer, set_tracer, tracer, validate_chrome
+from repro.models import get_model
+from repro.models import params as P
+from repro.serve import (
+    InferenceServer,
+    ObsHTTP,
+    PagedSpec,
+    Telemetry,
+    parse_exposition,
+)
+
+PLEN = 8
+
+
+@pytest.fixture(autouse=True)
+def _restore_global_tracer():
+    """Leave the process-wide tracer disabled after every test (counter/
+    instant emission reads it; leaking an enabled tracer couples tests)."""
+    yield
+    set_tracer(Tracer(enabled=False))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("qwen1.5-4b"))
+    api = get_model(cfg)
+    params = P.materialize(api.param_spec(cfg, 1), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, api, params
+
+
+def prompts_for(cfg, seed, n, plen=PLEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _pair(tag):
+    return [DeviceGroup(f"{tag}-a", power=2.0, sim_time_per_wi=0.0),
+            DeviceGroup(f"{tag}-b", power=1.0, sim_time_per_wi=0.0)]
+
+
+# ---------------------------------------------------------------- unit: math
+def test_union_busy_merges_overlaps():
+    busy, work = UtilizationMeter._union_busy(
+        [(0.0, 1.0, 2.0), (0.5, 1.5, 1.0), (3.0, 4.0, 1.0)], 0.0, 10.0)
+    assert busy == pytest.approx(2.5)  # [0,1.5] u [3,4]
+    assert work == pytest.approx(4.0)
+    # clipping to the window drops what falls outside
+    busy, work = UtilizationMeter._union_busy(
+        [(0.0, 1.0, 2.0), (5.0, 6.0, 1.0)], 4.5, 10.0)
+    assert busy == pytest.approx(1.0)
+    assert work == pytest.approx(1.0)
+
+
+def test_meter_snapshot_fractions_and_rates():
+    t = [0.0]
+    m = UtilizationMeter(window_s=10.0, clock=lambda: t[0])
+    t[0] = 10.0
+    m.note_interval("a", 2.0, 10.0, size=8)   # busy 8 of 10
+    m.note_interval("b", 6.0, 10.0, size=4)   # busy 4 of 10
+    m.note_tokens("a", 16, t=9.0)
+    snap = m.snapshot(["a", "b", "ghost"], rates={"a": 2.0, "b": 1.0})
+    ga, gb, gg = snap["groups"]["a"], snap["groups"]["b"], \
+        snap["groups"]["ghost"]
+    assert ga["busy_fraction"] == pytest.approx(0.8)
+    assert gb["busy_fraction"] == pytest.approx(0.4)
+    assert ga["work_rate"] == pytest.approx(1.0)  # 8 wi / 8 busy s
+    assert ga["tokens"] == 16 and ga["tokens_per_s"] == pytest.approx(1.6)
+    assert gg["busy_fraction"] == 0.0 and gg["work_rate"] is None
+    # efficiency = sum(c*u)/sum(c) = (2*.8 + 1*.4)/3
+    assert snap["efficiency"] == pytest.approx(2.0 / 3.0)
+    assert snap["balance"] == pytest.approx(0.5)
+    assert snap["straggler"]["member"] == "b"
+    # nothing in the reduction is NaN, ever
+    assert not any(v != v for v in (snap["efficiency"], snap["balance"],
+                                    snap["tokens_per_s"]))
+
+
+def test_meter_window_ages_out_and_forget():
+    t = [0.0]
+    m = UtilizationMeter(window_s=5.0, clock=lambda: t[0])
+    m.note_interval("a", 0.0, 1.0, size=1)
+    t[0] = 100.0  # the old interval is far outside the window now
+    snap = m.snapshot(["a"])
+    assert snap["groups"]["a"]["busy_fraction"] == 0.0
+    m.note_interval("a", 99.0, 100.0, size=1)
+    m.forget("a")
+    assert m.snapshot(["a"])["groups"]["a"]["busy_s"] == 0.0
+
+
+def test_live_efficiency_attribution_and_guards():
+    # empty / missing signals -> None fields, never NaN
+    out = live_efficiency({})
+    assert out["efficiency"] is None and out["straggler"] is None
+    out = live_efficiency({"a": {"busy_fraction": None}})
+    assert out["efficiency"] is None
+    # slow member lags because it is slow -> "rate"
+    out = live_efficiency({
+        "a": {"busy_fraction": 0.9, "capacity_rate": 10.0},
+        "b": {"busy_fraction": 0.5, "capacity_rate": 2.0}})
+    assert out["straggler"]["member"] == "b"
+    assert out["straggler"]["reason"] == "rate"
+    assert out["efficiency"] == pytest.approx((9.0 + 1.0) / 12.0)
+    # the laggard is NOT the slowest but is the highest-watt board ->
+    # perf-per-watt placement starves it deliberately
+    out = live_efficiency({
+        "a": {"busy_fraction": 0.9, "capacity_rate": 5.0, "watts": 100.0},
+        "b": {"busy_fraction": 0.4, "capacity_rate": 10.0, "watts": 400.0}})
+    assert out["straggler"]["reason"] == "watts"
+    # neither speed nor watts explains it -> placement bug
+    out = live_efficiency({
+        "a": {"busy_fraction": 0.9, "capacity_rate": 5.0},
+        "b": {"busy_fraction": 0.4, "capacity_rate": 10.0}})
+    assert out["straggler"]["reason"] == "placement"
+    # balanced members -> no straggler
+    out = live_efficiency({
+        "a": {"busy_fraction": 0.9, "capacity_rate": 5.0},
+        "b": {"busy_fraction": 0.88, "capacity_rate": 10.0}})
+    assert out["straggler"] is None
+
+
+def test_decision_journal_bounded_counts_and_instants():
+    j = DecisionJournal(cap=8)
+    for i in range(20):
+        j.record("placement", bucket=8, n=i)
+    j.record("migration", src="a", dst="b", outcome="moved")
+    snap = j.snapshot(last=64)
+    assert snap["total"] == 21
+    assert snap["counts"] == {"migration": 1, "placement": 20}
+    assert len(snap["recent"]) == 8  # ring bound
+    assert snap["recent"][-1]["kind"] == "migration"
+    assert all(r["seq"] is not None for r in snap["recent"])
+    # with the tracer on, each record mirrors as a "decision" instant
+    set_tracer(Tracer(enabled=True))
+    j2 = DecisionJournal(cap=8)
+    j2.record("admission", outcome="rejected", reason="deadline")
+    evs = tracer().chrome_events()
+    dec = [e for e in evs if e["name"] == "decision"]
+    assert len(dec) == 1 and dec[0]["args"]["kind"] == "admission"
+
+
+def test_spec_gate_flips_land_in_journal():
+    from repro.serve import ServiceModel, SpecGate
+
+    model = ServiceModel()
+    gate = SpecGate(model, k=2, probe_every=1000)
+    gate.journal = DecisionJournal(cap=16)
+    # warm both modes: spec fast first, then make spec slow -> flip
+    model.observe("seg_spec", 8, 0.01)
+    model.observe("seg_plain", 8, 0.1)
+    assert gate.decide(8)  # first settled decision: spec (no flip yet)
+    for _ in range(40):  # drag the spec EMA above plain
+        model.observe("seg_spec", 8, 10.0)
+    assert not gate.decide(8)  # flipped to plain
+    snap = gate.journal.snapshot()
+    assert snap["counts"].get("spec_gate") == 1
+    rec = [r for r in snap["recent"] if r["kind"] == "spec_gate"][-1]
+    assert rec["mode"] == "plain" and rec["bucket"] == 8
+    assert rec["forecast_speedup"] is not None
+
+
+def test_counter_events_validate_and_reject_bad_args():
+    set_tracer(Tracer(enabled=True))
+    tr = tracer()
+    tr.counter("occupancy", a=3, b=1.5)
+    doc = {"traceEvents": tr.chrome_events()}
+    cs = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 1 and cs[0]["args"] == {"a": 3, "b": 1.5}
+    assert validate_chrome(doc) == []
+    bad = {"traceEvents": [{"name": "x", "ph": "C", "pid": 1, "tid": "t",
+                            "ts": 0.0, "args": {}}]}
+    assert validate_chrome(bad)
+    bad["traceEvents"][0]["args"] = {"a": "not-a-number"}
+    assert validate_chrome(bad)
+
+
+def test_validate_bundle_schema():
+    good = {"schema": "enginecl-postmortem/1", "reason": "test",
+            "t_wall": 1.0, "pid": 1, "context": {}, "stats": {},
+            "efficiency": {}, "decisions": {"total": 0, "counts": {},
+                                            "recent": []},
+            "telemetry": {}, "recent_spans": [{"name": "s", "ph": "X"}]}
+    assert validate_bundle(good) == []
+    assert validate_bundle({"reason": "x"})  # missing keys
+    bad = dict(good, recent_spans=[{"nope": 1}])
+    assert validate_bundle(bad)
+    assert validate_bundle(dict(good, schema="bogus/9"))
+    assert validate_bundle("not a dict")
+
+
+def test_jsonable_round_trips():
+    doc = jsonable({"a": np.int64(3), "b": np.arange(2),
+                    "c": {1, 2}, "d": object()})
+    json.dumps(doc)  # must not raise
+    assert doc["a"] == 3 and doc["b"] == [0, 1]
+
+
+# --------------------------------------------------------------- exposition
+def test_prometheus_exposition_conforms_strictly():
+    tel = Telemetry(window=64)
+    tel.observe("ttft_s", 0.25)
+    tel.observe("ttft_s", 0.5)
+    tel.count("requests_completed", 3)
+    tel.gauge("coexec_efficiency", 0.93)
+    tel.gauge("weird name-with.chars", 1.0)
+    tel.gauge("bad", float("nan"))  # dropped, never rendered
+    text = tel.prometheus()
+    fams = parse_exposition(text)
+    assert fams["enginecl_ttft_s"]["type"] == "summary"
+    assert "Time to first token" in fams["enginecl_ttft_s"]["help"]
+    assert fams["enginecl_requests_completed_total"]["type"] == "counter"
+    assert fams["enginecl_coexec_efficiency"]["samples"][0][2] == \
+        pytest.approx(0.93)
+    assert "enginecl_weird_name_with_chars" in fams
+    assert "nan" not in text.lower()
+    # every family carries HELP and TYPE
+    assert all(f["help"] and f["type"] for f in fams.values())
+
+
+def test_parse_exposition_rejects_malformed():
+    with pytest.raises(ValueError, match="newline"):
+        parse_exposition("# TYPE a gauge\na 1")
+    with pytest.raises(ValueError, match="precedes its TYPE"):
+        parse_exposition("a 1\n")
+    with pytest.raises(ValueError, match="duplicate TYPE"):
+        parse_exposition("# TYPE a gauge\n# TYPE a gauge\na 1\n")
+    with pytest.raises(ValueError, match="bad TYPE"):
+        parse_exposition("# TYPE a widget\na 1\n")
+    with pytest.raises(ValueError, match="malformed sample"):
+        parse_exposition("# TYPE a gauge\na one\n")
+    with pytest.raises(ValueError, match="bad labels"):
+        parse_exposition('# TYPE a gauge\na{1bad="x"} 1\n')
+
+
+# ------------------------------------------------------------ disabled path
+def test_disabled_path_is_one_attr_read_and_allocation_free():
+    """Obs off must cost one attribute read per site and allocate nothing
+    on the hot path — the contract BENCH_serve's microbenchmark tracks."""
+    set_tracer(Tracer(enabled=False))
+    tr = tracer()
+    b = bus()
+    assert not tr.enabled and not b.active
+
+    def sites(n):
+        for _ in range(n):
+            if tr.enabled:
+                raise AssertionError
+            if b.active:
+                raise AssertionError
+
+    sites(100)  # warm
+    tracemalloc.start()
+    t_base, _ = tracemalloc.get_traced_memory()
+    sites(50_000)
+    t_after, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # per-iteration allocations would grow retained/peak bytes with the
+    # iteration count; a fixed sub-KB residue (call frames, tracemalloc's
+    # own bookkeeping) is noise, 50k iterations of even one small object
+    # would be megabytes.
+    assert t_after - t_base < 1024, (t_base, t_after)
+    assert peak - t_base < 4096, (t_base, peak)
+    t0 = time.perf_counter()
+    sites(50_000)
+    per_site = (time.perf_counter() - t0) / 100_000
+    assert per_site < 5e-6, f"{per_site * 1e9:.0f} ns/site"
+
+
+# ------------------------------------------------------------- integration
+def test_server_live_efficiency_decisions_health(model):
+    cfg, api, params = model
+    groups = _pair("obs")
+    prompts = prompts_for(cfg, 11, 8)
+    with InferenceServer(cfg, api, params, groups=groups,
+                         scheduler=HGuided(), group_batches=True,
+                         buckets=(PLEN,), max_batch=4, seg_len=2,
+                         max_new_cap=8, max_wait_ms=2.0,
+                         obs=EngineObs(enabled=True)) as srv:
+        handles = [srv.submit(p, 6) for p in prompts]
+        for h in handles:
+            h.result(timeout=600)
+        eff = srv.metrics()["efficiency"]
+        assert eff["enabled"] and set(eff["groups"]) == \
+            {g.name for g in groups}
+        assert eff["efficiency"] is not None
+        assert 0.0 < eff["efficiency"] <= 1.0
+        assert 0.0 < eff["balance"] <= 1.0
+        for d in eff["groups"].values():
+            assert 0.0 <= d["busy_fraction"] <= 1.0
+        s = srv.stats()
+        assert s["decisions"]["counts"].get("placement", 0) >= 1
+        assert all(r["kind"] in ("placement", "migration", "admission",
+                                 "spec_gate", "elastic")
+                   for r in s["decisions"]["recent"])
+        code, body = srv.health()
+        assert code == 200 and body["status"] == "ok"
+        assert all(g["ready"] for g in body["groups"].values())
+        fams = parse_exposition(srv.prometheus())
+        assert "enginecl_coexec_efficiency" in fams
+    # after close: health degrades, meter detached from the bus
+    code, body = srv.health()
+    assert code == 503 and not body["accepting"]
+    assert not bus().active
+
+
+def test_obs_disabled_server_reports_off(model):
+    cfg, api, params = model
+    with InferenceServer(cfg, api, params, groups=[DeviceGroup("plain")],
+                         buckets=(PLEN,), max_batch=2, seg_len=2,
+                         max_new_cap=6) as srv:
+        assert not srv.obs.enabled  # tracer off -> obs defaults off
+        h = srv.submit(prompts_for(cfg, 3, 1)[0], 4)
+        h.result(timeout=600)
+        assert srv.metrics()["efficiency"] == {"enabled": False}
+        assert srv.stats()["decisions"]["total"] == 0
+        assert not bus().active
+
+
+def test_elastic_drain_join_visible_in_obs(model):
+    cfg, api, params = model
+    groups = _pair("eobs")
+    prompts = prompts_for(cfg, 21, 6)
+    with InferenceServer(cfg, api, params, groups=groups,
+                         scheduler=HGuided(), group_batches=True,
+                         buckets=(PLEN,), max_batch=4, seg_len=2,
+                         max_new_cap=10, max_wait_ms=2.0,
+                         paged=PagedSpec(block_len=4),
+                         obs=EngineObs(enabled=True)) as srv:
+        handles = [srv.submit(p, 8) for p in prompts]
+        deadline = time.monotonic() + 120
+        while srv.stats()["segments"] < 1:
+            assert time.monotonic() < deadline, "decode never started"
+            time.sleep(0.005)
+        srv.drain_group("eobs-b")
+        code, body = srv.health()
+        assert code == 200  # one healthy member still serves
+        assert body["groups"]["eobs-b"]["draining"]
+        assert not body["groups"]["eobs-b"]["ready"]
+        assert body["groups"]["eobs-a"]["ready"]
+        assert "pool" in body  # paged mode exposes block pressure
+        for h in handles:
+            h.result(timeout=600)
+        # draining members are excluded from the efficiency reduction and
+        # nothing goes NaN while the member set shrinks
+        eff = srv.metrics()["efficiency"]
+        assert eff["groups"]["eobs-b"]["draining"]
+        assert "eobs-b" not in eff["members"]
+        assert eff["efficiency"] is None or eff["efficiency"] == \
+            eff["efficiency"]
+        srv.join_group(DeviceGroup("eobs-c"))
+        h2 = [srv.submit(p, 4) for p in prompts[:2]]
+        for h in h2:
+            h.result(timeout=600)
+        eff = srv.metrics()["efficiency"]
+        assert eff["efficiency"] is None or 0.0 < eff["efficiency"] <= 1.0
+        kinds = srv.stats()["decisions"]["counts"]
+        assert kinds.get("elastic", 0) >= 2  # drain + join
+        acts = [r.get("action") for r in
+                srv.stats()["decisions"]["recent"] if r["kind"] == "elastic"]
+        assert "drain" in acts and "join" in acts
+
+
+def test_http_endpoints_live(model):
+    cfg, api, params = model
+    groups = _pair("http")
+    with InferenceServer(cfg, api, params, groups=groups,
+                         scheduler=HGuided(), group_batches=True,
+                         buckets=(PLEN,), max_batch=4, seg_len=2,
+                         max_new_cap=6, max_wait_ms=2.0,
+                         obs=EngineObs(enabled=True)) as srv:
+        http = ObsHTTP(srv, port=0)
+        try:
+            handles = [srv.submit(p, 4) for p in prompts_for(cfg, 31, 4)]
+            for h in handles:
+                h.result(timeout=600)
+            with urllib.request.urlopen(http.url("/metrics")) as r:
+                assert r.status == 200
+                assert "text/plain" in r.headers["Content-Type"]
+                fams = parse_exposition(r.read().decode())
+            assert "enginecl_coexec_efficiency" in fams
+            with urllib.request.urlopen(http.url("/healthz")) as r:
+                assert r.status == 200
+                body = json.loads(r.read())
+            assert body["status"] == "ok" and body["accepting"]
+            with urllib.request.urlopen(http.url("/stats")) as r:
+                stats = json.loads(r.read())
+            assert stats["decisions"]["total"] >= 1
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(http.url("/nope"))
+            assert ei.value.code == 404
+        finally:
+            http.close()
+    # after server close the handler still answers — degraded, not dead
+    http2 = ObsHTTP(srv, port=0)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(http2.url("/healthz"))
+        assert ei.value.code == 503
+        assert json.loads(ei.value.read())["status"] == "degraded"
+    finally:
+        http2.close()
+
+
+def test_flight_recorder_on_injected_failure(model, tmp_path):
+    cfg, api, params = model
+    crash_dir = str(tmp_path / "crashes")
+    srv = InferenceServer(cfg, api, params, groups=[DeviceGroup("fr")],
+                          buckets=(PLEN,), max_batch=2, seg_len=2,
+                          max_new_cap=6,
+                          obs=EngineObs(enabled=True, crash_dir=crash_dir))
+
+    def boom(*a, **k):
+        raise RuntimeError("injected fault")
+
+    srv.kernels.segment_kernel = boom
+    with srv:
+        h = srv.submit(prompts_for(cfg, 41, 1)[0], 4)
+        with pytest.raises(Exception):
+            h.result(timeout=600)
+    path = srv.obs.recorder.last_path
+    assert path is not None and path.startswith(crash_dir)
+    doc = json.loads(open(path).read())
+    assert validate_bundle(doc) == []
+    assert "injected fault" in json.dumps(doc["context"])
+    assert doc["reason"] in ("batcher_crashed", "segment_failed")
+    assert isinstance(doc["decisions"]["recent"], list)
+
+
+def test_flight_recorder_dump_cap(tmp_path):
+    obs = EngineObs(enabled=True, crash_dir=str(tmp_path), max_dumps=2)
+    paths = [obs.postmortem(f"r{i}") for i in range(5)]
+    assert sum(p is not None for p in paths) == 2
